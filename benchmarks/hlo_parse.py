@@ -1,0 +1,64 @@
+"""Parse collective traffic out of (SPMD-partitioned, per-device) HLO text.
+
+cost_analysis() has no collective-bytes entry, so the roofline's collective
+term is derived here: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op's per-partition shape bytes, bucketed by op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_LINE_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op: {'bytes': per-device payload bytes, 'count': n}, ...}.
+
+    '-start' variants are counted once ('-done' carries no new payload).
+    """
+    out: dict[str, dict] = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for m in _LINE_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        b = _shape_bytes(shape_txt)
+        out[op]["bytes"] += b
+        out[op]["count"] += 1
+    return dict(out)
+
+
+def link_bytes(coll: dict) -> float:
+    """Per-device bytes actually crossing links, with ring-algorithm factors:
+    all-reduce moves ~2x payload, all-gather/reduce-scatter ~1x (payload is
+    already the full gathered shape / pre-scatter shape), permute 1x."""
+    total = 0.0
+    for op, rec in coll.items():
+        f = 2.0 if op == "all-reduce" else 1.0
+        total += f * rec["bytes"]
+    return total

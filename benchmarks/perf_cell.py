@@ -1,0 +1,107 @@
+"""Hillclimb driver: rebuild one (arch x shape) cell with config overrides and
+report the three roofline terms + byte/collective attribution — the
+hypothesis -> change -> measure loop of EXPERIMENTS.md §Perf.
+
+The analysis is trace-based (jaxpr; seconds, not minutes), so iteration is
+cheap; winning configs are then re-verified with a full 512-device compile via
+repro.launch.dryrun.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_cell --arch qwen3-0.6b \
+      --shape train_4k --set num_microbatches=16 --set remat=False
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from benchmarks.jaxpr_analysis import analyze_fn
+from benchmarks.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, CHIPS, \
+    model_flops
+
+
+def analyze_cell(arch_name, shape_name, overrides=None, run_overrides=None,
+                 multi_pod=False):
+    import repro.launch.dryrun as dr
+    from repro.configs import ARCHS, SHAPES, RunConfig
+
+    cfg = ARCHS[arch_name]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    # monkey-patch the registry entry so build_cell picks up the override
+    old = ARCHS[arch_name]
+    ARCHS[arch_name] = cfg
+    try:
+        fn, args, mesh, run = dr.build_cell(arch_name, shape_name, multi_pod,
+                                            run_overrides=run_overrides)
+        with mesh:
+            jc = analyze_fn(fn, args, mesh)
+    finally:
+        ARCHS[arch_name] = old
+    rec = {"active_params": cfg.active_param_count(), "shape": shape_name}
+    mf = model_flops(rec)
+    t_comp = jc.flops / PEAK_FLOPS
+    slice_primes = ("dynamic_slice", "gather", "dynamic_update_slice",
+                    "scatter", "convert_element_type")
+    slice_b = sum(jc.bytes_by_prim.get(p_, 0.0) for p_ in slice_primes)
+    t_mem_lo = (jc.dot_bytes + slice_b) / HBM_BW
+    t_mem_hi = jc.bytes_upper / HBM_BW
+    t_mem = t_mem_lo
+    t_mem_kern = max(t_mem_lo - jc.kern_dot_bytes / HBM_BW, 0.0)
+    t_comp_kern = max(t_comp - 0.45 * jc.kern_dot_flops / PEAK_FLOPS, 0.0)
+    t_coll = jc.link_bytes / LINK_BW
+    return dict(
+        t_compute=t_comp, t_memory=t_mem, t_mem_lo=t_mem_lo,
+        t_mem_hi=t_mem_hi, t_collective=t_coll,
+        dominant=max((("compute", t_comp), ("memory", t_mem),
+                      ("collective", t_coll)), key=lambda kv: kv[1])[0],
+        useful=mf / (jc.flops * CHIPS) if jc.flops else 0.0,
+        roofline_frac=(mf / CHIPS / PEAK_FLOPS) /
+        max(t_comp, t_mem, t_coll),
+        t_memory_kern=t_mem_kern, t_compute_kern=t_comp_kern,
+        roofline_frac_kern=(mf / CHIPS / PEAK_FLOPS) /
+        max(t_comp_kern, t_mem_kern, t_coll),
+        flops=jc.flops, dot_flops=jc.dot_flops,
+        bytes_by_prim=dict(sorted(jc.bytes_by_prim.items(),
+                                  key=lambda kv: -kv[1])[:12]),
+        collectives=jc.collective_bytes,
+    )
+
+
+def _parse_val(v: str):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return v == "True"
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override key=value")
+    ap.add_argument("--run-set", action="append", default=[],
+                    help="RunConfig override key=value")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    over = dict(kv.split("=", 1) for kv in a.set)
+    over = {k: _parse_val(v) for k, v in over.items()}
+    rover = dict(kv.split("=", 1) for kv in a.run_set)
+    rover = {k: _parse_val(v) for k, v in rover.items()}
+    res = analyze_cell(a.arch, a.shape, over or None, rover or None,
+                       a.multi_pod)
+    print(json.dumps(res, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

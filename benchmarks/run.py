@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+measured run where applicable; derived = the figure's headline quantity).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_benchmarks as pb
+
+    benches = [
+        pb.fig3_nm_sweep,
+        pb.fig4_allocation_policies,
+        pb.table4_whimpy_scaling,
+        pb.fig5_6_convergence,
+        pb.sec84_wait_time,
+        pb.wave_sync_comm_saving,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived:.6g}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},0.0,ERROR")
+            traceback.print_exc()
+    # roofline summary (from dry-run artifacts, if present)
+    try:
+        from benchmarks.roofline import table
+        rows = table()
+        if rows:
+            best = max(rows, key=lambda r: r["roofline_frac"])
+            for r in rows:
+                print(f"roofline/{r['cell']},0.0,{r['roofline_frac']:.6g}")
+            print(f"roofline/best_cell,0.0,{best['roofline_frac']:.6g}")
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Batched serving example: prefill a batch of prompts, then decode
+autoregressively with KV/SSM caches — across three architecture families
+(dense GQA, sliding-window, attention-free RWKV6).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+for arch in ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b"):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--batch", "4", "--prompt-len", "24", "--gen", "12"],
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(HERE, "..", "src")},
+        capture_output=True, text=True, timeout=900)
+    sys.stdout.write(r.stdout)
+    if r.returncode:
+        sys.stderr.write(r.stderr[-2000:])
+        raise SystemExit(f"{arch} failed")
+print("OK")

@@ -1,0 +1,78 @@
+"""End-to-end LM training driver: data pipeline -> pipelined wave steps ->
+WSP sync -> checkpoints, with resume. Presets:
+
+  demo (default) ~2M params, a few hundred waves in ~2 min on CPU
+  100m           a ~100M-param qwen3-family config (the assignment's
+                 "train ~100M model" example; same code path, more patience
+                 or a real accelerator)
+
+  PYTHONPATH=src python examples/train_lm.py --waves 300
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --waves 200
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core.wave import build_local_wave_step
+from repro.models import lm
+from repro.optim import make_optimizer, warmup_cosine
+from repro.runtime.checkpoint import latest_checkpoint, load_checkpoint
+from repro.runtime.trainer import WSPTrainer
+
+PRESETS = {
+    # ~2M params: quick CPU demo
+    "demo": dict(num_layers=4, d_model=128, d_ff=256, vocab_size=512,
+                 num_heads=4, num_kv_heads=2, head_dim=32,
+                 num_microbatches=4),
+    # ~100M params (qwen3 family): 12L x 768, vocab 32k
+    "100m": dict(num_layers=12, d_model=768, d_ff=2048, vocab_size=32768,
+                 num_heads=12, num_kv_heads=4, head_dim=64,
+                 num_microbatches=4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="demo")
+    ap.add_argument("--waves", type=int, default=300)
+    ap.add_argument("--num-vw", type=int, default=2)
+    ap.add_argument("--D", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/hetpipe_lm_ckpt")
+    a = ap.parse_args()
+
+    cfg = reduced(ARCHS["qwen3-0.6b"], **PRESETS[a.preset])
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(np.size(x) for x in jax.tree.leaves(params))
+    print(f"preset={a.preset} params={n_params/1e6:.1f}M "
+          f"vw={a.num_vw} D={a.D}")
+
+    opt = make_optimizer("momentum",
+                         warmup_cosine(0.1, 20, a.waves))
+    step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
+
+    path = latest_checkpoint(a.ckpt)
+    if path:
+        out, meta = load_checkpoint(path, {"params": params})
+        params = out["params"]
+        print(f"resumed from {path} (wave {meta['step']})")
+
+    tr = WSPTrainer(params, step, opt, num_vw=a.num_vw, D=a.D,
+                    batch=a.batch, seq=a.seq, vocab=cfg.vocab_size,
+                    max_waves=a.waves, ckpt_dir=a.ckpt, ckpt_every=25)
+    rep = tr.run()
+    t, loss = rep.loss_curve()
+    k = max(4, len(loss) // 20)
+    print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
+          f"loss {np.mean(loss[:k]):.4f} -> {np.mean(loss[-k:]):.4f}")
+    print(f"PS traffic: pushed={rep.bytes_pushed/1e6:.1f}MB "
+          f"(one aggregated push per wave — the WSP saving)")
+    print(f"checkpoints in {a.ckpt}: {sorted(os.listdir(a.ckpt))[-3:]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Sharded parameter server for WSP data parallelism (paper Section 5).
+
+Holds w_global as flat numpy shards (layer round-robin over PS shards — the
+paper's 'default' placement; 'local' placement maps a shard to the node that
+produces its partition, modeled by shard affinity metadata). Virtual workers
+push *wave-aggregated deltas* ũ (one push per wave — the paper's communication
+saving) and pull w_global under the WSP clock gate.
+
+This is the host-level PS used by the threaded runtime (true asynchrony,
+D >= 0). The SPMD dry-run path instead reduces wave deltas with collectives
+(D = 0); both share the same WSP clock state machine.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.wsp import WSPClockServer
+from repro.dist.compression import ErrorFeedbackCompressor
+
+
+def tree_flatten_np(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+class ParameterServer:
+    def __init__(self, params_tree, *, D: int = 0, num_shards: int = 4,
+                 placement: str = "default",
+                 compression_ratio: Optional[float] = None):
+        leaves, self.treedef = tree_flatten_np(params_tree)
+        self.shapes = [l.shape for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.flat = [l.astype(np.float32).ravel().copy() for l in leaves]
+        self.num_shards = num_shards
+        self.placement = placement
+        # layer/leaf round-robin over shards (paper's default placement)
+        self.shard_of_leaf = [i % num_shards for i in range(len(leaves))]
+        self._locks = [threading.Lock() for _ in range(num_shards)]
+        self.clock = WSPClockServer(D)
+        self.push_count = 0
+        self.bytes_pushed = 0
+        self.bytes_wire = 0
+        self.compressor = (ErrorFeedbackCompressor(compression_ratio)
+                           if compression_ratio else None)
+
+    # -- worker lifecycle -------------------------------------------------
+    def register(self, wid: str):
+        self.clock.register(wid)
+
+    def deregister(self, wid: str):
+        self.clock.deregister(wid)
+
+    # -- WSP protocol -----------------------------------------------------
+    def push_wave(self, wid: str, deltas_tree) -> int:
+        """Apply a wave-aggregated delta; advances the worker's local clock."""
+        leaves, _ = tree_flatten_np(deltas_tree)
+        for i, d in enumerate(leaves):
+            flat = d.astype(np.float32).ravel()
+            self.bytes_pushed += flat.nbytes
+            if self.compressor is not None:
+                idx, vals = self.compressor.compress(f"{wid}/{i}", flat)
+                self.bytes_wire += self.compressor.wire_bytes(idx, vals)
+                with self._locks[self.shard_of_leaf[i]]:
+                    self.flat[i][idx] += vals
+            else:
+                self.bytes_wire += flat.nbytes
+                with self._locks[self.shard_of_leaf[i]]:
+                    self.flat[i] += flat
+        self.push_count += 1
+        return self.clock.complete_wave(wid)
+
+    def wait_pull_allowed(self, wid: str, timeout: float = 120.0) -> bool:
+        return self.clock.wait_until_allowed(wid, timeout)
+
+    def pull(self):
+        """Snapshot of w_global (consistent per leaf)."""
+        out = []
+        for i, f in enumerate(self.flat):
+            with self._locks[self.shard_of_leaf[i]]:
+                out.append(f.copy().reshape(self.shapes[i])
+                           .astype(self.dtypes[i]))
+        return jax.tree.unflatten(self.treedef, out)
+
+    # -- checkpointing ----------------------------------------------------
+    def state_dict(self):
+        return {
+            "flat": [f.copy() for f in self.flat],
+            "clocks": dict(self.clock.state.clocks),
+            "push_count": self.push_count,
+        }
+
+    def load_state_dict(self, sd):
+        for i, f in enumerate(sd["flat"]):
+            self.flat[i][:] = f
+        self.clock.state.clocks = dict(sd["clocks"])
+        self.push_count = sd["push_count"]

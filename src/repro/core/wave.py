@@ -1,0 +1,367 @@
+"""The pipelined wave step — HetPipe's virtual-worker PMP in SPMD JAX.
+
+One jitted call processes one *wave* (Nm minibatches) through the pipeline:
+  - the `model` mesh axis hosts stage x tp (paper: the k GPUs of a virtual
+    worker); stages exchange boundary activations with lax.ppermute inside a
+    scan over pipeline ticks (Nm + stages - 1 ticks; bubble ticks execute
+    masked garbage, so compiled HLO FLOPs honestly include the pipeline bubble)
+  - `data` (x `pod`) axes index virtual workers; the wave-aggregated update is
+    reduced across them once per wave (WSP's per-wave sync; D=0 in SPMD — the
+    threaded runtime provides true-async D>0 via the parameter server)
+
+All microbatch packing/unpacking happens VW-locally inside the shard_map body,
+so no global resharding is introduced around the pipeline. The same machinery
+drives train (AD through the pipeline scan), prefill and decode (fwd-only,
+KV/SSM caches updated in the scan carry).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace as dc_replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import lm
+from repro.models.blocks import LayerCtx, apply_layer
+from repro.models.layers import chunked_cross_entropy
+from repro.optim import make_optimizer
+
+S_AX, T_AX, D_AX = "stage", "tp", "data"
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", D_AX) if a in mesh.axis_names)
+
+
+def n_dp(mesh: Mesh) -> int:
+    axes = dp_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+# ----------------------------------------------------------------------------
+# cache microbatch slicing (batch at dim 1 of every cache leaf)
+# ----------------------------------------------------------------------------
+def _cache_slice_mb(cache, j, mb):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, j * mb, mb, axis=1), cache)
+
+
+def _cache_update_mb(cache, new_rows, j, mb, valid):
+    def upd(a, n):
+        old = jax.lax.dynamic_slice_in_dim(a, j * mb, mb, axis=1)
+        n = jnp.where(valid, n.astype(a.dtype), old)
+        return jax.lax.dynamic_update_slice_in_dim(a, n, j * mb, axis=1)
+    return jax.tree.map(upd, cache, new_rows)
+
+
+# ----------------------------------------------------------------------------
+# per-device pipeline (called inside shard_map)
+# ----------------------------------------------------------------------------
+def _stage_apply(cfg, blocks_local, x, meta_arrs, ctx: LayerCtx, cache_local):
+    """Unrolled layer slots with tick-validity threaded into each layer."""
+    aux = jnp.zeros((), jnp.float32)
+    uk = lm.uniform_kind(cfg)
+    base_valid = ctx.valid
+    for s in range(cfg.layer_slots):
+        p_l = jax.tree.map(lambda a: a[s], blocks_local)
+        ctx_s = dc_replace(
+            ctx,
+            kind=uk if uk is not None else meta_arrs["kind"][s],
+            valid=base_valid if uk is not None
+            else jnp.logical_and(base_valid, meta_arrs["valid"][s]),
+            full_i=meta_arrs["full_i"][s],
+            win_i=meta_arrs["win_i"][s],
+            ssm_i=s,
+        )
+        x, cache_local, a = apply_layer(cfg, p_l, x, ctx_s, cache_local)
+        aux = aux + a
+    return x, cache_local, aux
+
+
+def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
+                  mode: str, nm: int, cache_local=None, pos=None,
+                  tp_axis: Optional[str], merge_axis: Optional[str],
+                  seq_offset=0, remat: bool = False):
+    """x_local [Bl, S, d] (this VW's wave batch). Returns (y [Bl,S,d] — valid
+    on the last stage — cache_local, aux)."""
+    stages = cfg.stages
+    si = jax.lax.axis_index(S_AX)
+    Bl, S, d = x_local.shape
+    mb = Bl // nm
+    x_wave = x_local.reshape(nm, mb, S, d)
+    meta_arrs = {k: meta_local[k][0] for k in
+                 ("kind", "valid", "full_i", "win_i")}          # [slots]
+    ticks = nm + stages - 1
+    perm = [(i, i + 1) for i in range(stages - 1)]
+
+    def stage_call(x_in, cache_mb, tick_valid, pos_):
+        ctx = LayerCtx(mode=mode, pos=pos_, tp_axis=tp_axis,
+                       merge_axis=merge_axis, seq_offset=seq_offset,
+                       valid=tick_valid)
+        return _stage_apply(cfg, blocks_local, x_in, meta_arrs, ctx, cache_mb)
+
+    stage_fn = jax.checkpoint(stage_call) if (remat and mode == "train") \
+        else stage_call
+
+    def tick(carry, t):
+        buf_in, out, cache_c, aux = carry
+        mb_idx = t - si
+        valid = (mb_idx >= 0) & (mb_idx < nm)
+        mb_c = jnp.clip(mb_idx, 0, nm - 1)
+        x_fresh = jax.lax.dynamic_index_in_dim(x_wave, mb_c, 0, keepdims=False)
+        x_in = jnp.where(si == 0, x_fresh, buf_in)
+        if cache_c is None:
+            y, _, aux_t = stage_fn(x_in, None, valid, pos_=pos)
+        else:
+            # serve path (no AD): bubble ticks skip the cache read/write and
+            # the stage compute entirely — otherwise every dead tick pays the
+            # full cache-slice HBM traffic ((nm+k-1)/nm x minimal bytes;
+            # measured 2.9x for decode_32k at nm=8 — EXPERIMENTS.md §Perf)
+            def live(cc):
+                cm = _cache_slice_mb(cc, mb_c, mb)
+                y_, new_cm, a_ = stage_fn(x_in, cm, valid, pos_=pos)
+                cc = _cache_update_mb(cc, new_cm, mb_c, mb, valid)
+                return cc, y_, a_
+
+            def dead(cc):
+                return cc, jnp.zeros_like(x_in), jnp.zeros((), jnp.float32)
+
+            cache_c, y, aux_t = jax.lax.cond(valid, live, dead, cache_c)
+        aux = aux + jnp.where(valid, aux_t, 0.0)
+        out_idx = t - (stages - 1)
+        w_valid = (si == stages - 1) & (out_idx >= 0) & (out_idx < nm)
+        oc = jnp.clip(out_idx, 0, nm - 1)
+        old = jax.lax.dynamic_index_in_dim(out, oc, 0, keepdims=False)
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, jnp.where(w_valid, y, old), oc, 0)
+        buf_next = jax.lax.ppermute(y, S_AX, perm)
+        return (buf_next, out, cache_c, aux), None
+
+    buf0 = jnp.zeros((mb, S, d), x_local.dtype)
+    out0 = jnp.zeros_like(x_wave)
+    aux0 = jnp.zeros((), jnp.float32)
+    (_, out, cache_local, aux), _ = jax.lax.scan(
+        tick, (buf0, out0, cache_local, aux0), jnp.arange(ticks))
+    return out.reshape(Bl, S, d), cache_local, aux
+
+
+# ----------------------------------------------------------------------------
+# spec assembly
+# ----------------------------------------------------------------------------
+def _meta_tree(cfg: ArchConfig):
+    m = lm.layer_meta(cfg)
+    arrs = {k: jnp.asarray(m[k]) for k in ("kind", "valid", "full_i", "win_i")}
+    specs = {k: P(S_AX, None) for k in arrs}
+    return arrs, specs
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, tree)
+
+
+def _loss_over_wave(cfg, run, params, hid, labels):
+    """hid [B, S, d] paired row-for-row with labels [B, S]."""
+    h = lm.final_hidden_norm(cfg, params, hid)
+    return chunked_cross_entropy(
+        h, lm.head_matrix(cfg, params), labels,
+        chunk=min(run.loss_chunk, h.shape[-2]))
+
+
+# ----------------------------------------------------------------------------
+# train step
+# ----------------------------------------------------------------------------
+def build_train_step(run: RunConfig, mesh: Mesh):
+    """Returns (train_step, state_specs) where
+    train_step(params, opt_state, batch{'inputs','labels'}) ->
+        (params, opt_state, metrics)."""
+    cfg = run.arch
+    assert cfg.stages == mesh.shape[S_AX], (cfg.stages, dict(mesh.shape))
+    assert cfg.tp in (1, mesh.shape[T_AX]), (cfg.tp, dict(mesh.shape))
+    nm = cfg.num_microbatches
+    meta_arrs, meta_specs = _meta_tree(cfg)
+    pspecs = lm.param_specs(cfg)
+    tp_axis = T_AX if cfg.tp > 1 else None
+    cdt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+    opt = make_optimizer(run.optimizer, run.lr, run.weight_decay)
+    dp = dp_axes(mesh)
+
+    def body(blocks, x, meta):
+        y, _, aux = pipeline_wave(
+            cfg, blocks, x, meta, mode="train", nm=nm, tp_axis=tp_axis,
+            merge_axis=None, remat=cfg.remat)
+        aux = jax.lax.psum(aux, S_AX)      # each stage holds its layers' aux
+        for ax in dp:                      # aux differs per VW's tokens
+            aux = jax.lax.pmean(aux, ax)
+        # the CE head is vocab-sharded over (stage, tp): every model device
+        # needs the final hidden anyway, so this masked psum doubles as the
+        # hidden broadcast GSPMD would otherwise insert for the loss.
+        return _bcast_from_last(y, cfg.stages), aux / nm
+
+    pipe = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )
+
+    def wave_loss(params, inputs, labels):
+        x = lm.embed_tokens(cfg, params, inputs).astype(cdt)
+        y, aux = pipe(_cast_tree(params["blocks"], cdt), x, meta_arrs)
+        loss = _loss_over_wave(cfg, run, params, y, labels)
+        total = loss + 0.01 * aux / max(cfg.num_layers, 1)
+        return total, (total, aux)
+
+    def train_step(params, opt_state, batch):
+        (_, (loss, aux)), grads = jax.value_and_grad(
+            wave_loss, has_aux=True)(params, batch["inputs"], batch["labels"])
+        deltas, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, deltas)
+        return params, opt_state, {"loss": loss, "aux": aux}
+
+    state_specs = {"params": pspecs,
+                   "batch": {"inputs": P(dp, *([None] * (2 if cfg.frontend ==
+                                                "none" else 3))[1:]),
+                             "labels": P(dp, None)},
+                   "opt": None, "meta": meta_arrs, "optimizer": opt}
+    return train_step, state_specs
+
+
+# NOTE on out_specs of the pipeline: the per-device output y [Bl, S, d] is
+# only meaningful on the last stage; out_specs P(dp, None, None) declares it
+# replicated over stage/tp, and check_vma=False lets XLA pick the last stage's
+# copy... which is NOT guaranteed. We therefore broadcast the last stage's
+# value inside the body — see _bcast_from_last below, applied in pipeline_wave
+# callers via _finalize_out.
+
+
+def _bcast_from_last(y, stages):
+    """Make y consistent across stages: everyone gets the last stage's copy
+    via a single ppermute hop ring (last -> all through rotation is O(k) hops;
+    instead use psum of masked value — one all-reduce over the stage axis)."""
+    si = jax.lax.axis_index(S_AX)
+    contrib = jnp.where(si == stages - 1, y, jnp.zeros_like(y))
+    return jax.lax.psum(contrib, S_AX)
+
+
+# ----------------------------------------------------------------------------
+# serve steps (prefill / decode)
+# ----------------------------------------------------------------------------
+def _serve_nm(run: RunConfig, mesh) -> tuple[int, int]:
+    cfg, shp = run.arch, run.shape
+    vw_b = max(1, shp.global_batch // n_dp(mesh))
+    nm = min(cfg.num_microbatches, vw_b)
+    while vw_b % nm:
+        nm -= 1
+    return nm, vw_b // nm
+
+
+def build_decode_step(run: RunConfig, mesh: Mesh):
+    """step(params, batch{'inputs','cache','pos'}) -> (logits, cache)."""
+    cfg, shp = run.arch, run.shape
+    nm, _ = _serve_nm(run, mesh)
+    meta_arrs, meta_specs = _meta_tree(cfg)
+    pspecs = lm.param_specs(cfg)
+    tp_axis = T_AX if cfg.tp > 1 else None
+    seq_sharded = shp.global_batch < 16 and D_AX in mesh.axis_names
+    merge_axis = D_AX if seq_sharded else None
+    cdt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+    cache_dt = {"f8": jnp.float8_e4m3fn, "": cdt}.get(run.cache_dtype, cdt)
+    _, cspecs = lm.cache_struct(cfg, shp.global_batch, shp.seq_len,
+                                seq_shards=16 if seq_sharded else 1,
+                                dtype=cache_dt)
+    dp = dp_axes(mesh) if not seq_sharded else ()
+    nd = mesh.shape[D_AX] if D_AX in mesh.axis_names else 1
+
+    def body(blocks, x, meta, cache, pos):
+        so = jax.lax.axis_index(D_AX) * (shp.seq_len // nd) if seq_sharded \
+            else 0
+        y, cache, aux = pipeline_wave(
+            cfg, blocks, x, meta, mode="decode", nm=nm, cache_local=cache,
+            pos=pos, tp_axis=tp_axis, merge_axis=merge_axis, seq_offset=so)
+        return _bcast_from_last(y, cfg.stages), cache, aux
+
+    pipe = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs,
+                  P()),
+        out_specs=(P(dp, None, None), cspecs, P()),
+        check_vma=False,
+    )
+
+    def decode_step(params, batch):
+        x = lm.embed_tokens(cfg, params, batch["inputs"]).astype(cdt)
+        logits_hid, cache, _ = pipe(_cast_tree(params["blocks"], cdt), x,
+                                    meta_arrs, batch["cache"], batch["pos"])
+        logits = lm.logits_ref(cfg, params, logits_hid)
+        return logits, cache
+
+    return decode_step, pspecs, cspecs
+
+
+def build_prefill_step(run: RunConfig, mesh: Mesh):
+    """step(params, batch{'inputs','cache'}) -> (last_logits, cache)."""
+    cfg, shp = run.arch, run.shape
+    nm, _ = _serve_nm(run, mesh)
+    meta_arrs, meta_specs = _meta_tree(cfg)
+    pspecs = lm.param_specs(cfg)
+    tp_axis = T_AX if cfg.tp > 1 else None
+    cdt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+    cache_dt = {"f8": jnp.float8_e4m3fn, "": cdt}.get(run.cache_dtype, cdt)
+    _, cspecs = lm.cache_struct(cfg, shp.global_batch, shp.seq_len,
+                                dtype=cache_dt)
+    dp = dp_axes(mesh)
+
+    def body(blocks, x, meta, cache):
+        y, cache, aux = pipeline_wave(
+            cfg, blocks, x, meta, mode="prefill", nm=nm, cache_local=cache,
+            pos=None, tp_axis=tp_axis, merge_axis=None)
+        return _bcast_from_last(y[:, -1:], cfg.stages), cache, aux
+
+    pipe = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs),
+        out_specs=(P(dp, None, None), cspecs, P()),
+        check_vma=False,
+    )
+
+    def prefill_step(params, batch):
+        x = lm.embed_tokens(cfg, params, batch["inputs"]).astype(cdt)
+        last_hid, cache, _ = pipe(_cast_tree(params["blocks"], cdt), x,
+                                  meta_arrs, batch["cache"])
+        logits = lm.logits_ref(cfg, params, last_hid)
+        return logits, cache
+
+    return prefill_step, pspecs, cspecs
+
+
+# ----------------------------------------------------------------------------
+# single-device wave step (per-VW; used by the threaded WSP runtime and as
+# the pipeline-correctness oracle: a wave == grad accumulation over Nm
+# minibatches computed with wave-start weights)
+# ----------------------------------------------------------------------------
+def build_local_wave_step(cfg: ArchConfig, nm: int, optimizer):
+    def wave_loss(params, inputs, labels):
+        def mb_loss(carry, xs):
+            x_mb, l_mb = xs
+            loss, _, _ = lm.forward_ref(cfg, params, x_mb, mode="train",
+                                        labels=l_mb)
+            return carry + loss, None
+        B = labels.shape[0]
+        xw = inputs.reshape(nm, B // nm, *inputs.shape[1:])
+        lw = labels.reshape(nm, B // nm, labels.shape[1])
+        total, _ = jax.lax.scan(mb_loss, jnp.zeros((), jnp.float32), (xw, lw))
+        return total / nm
+
+    @jax.jit
+    def wave_step(params, opt_state, inputs, labels):
+        loss, grads = jax.value_and_grad(wave_loss)(params, inputs, labels)
+        deltas, opt_state = optimizer.update(grads, opt_state, params)
+        return deltas, opt_state, loss
+
+    return wave_step

@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decoding: one query token vs. a long KV cache.
+
+Grid (b, kv_head, k_block), k_block innermost; the GQA group's G query rows
+ride together as a [G, hd] tile (G <= 8 for the assigned archs — a VPU-sized
+tile; the matmuls are [G,hd]x[hd,bk], MXU-aligned on bk and hd). Accumulators
+(m, l, acc over G rows) persist in VMEM scratch; blocks beyond `length` (the
+current cache fill) or outside the sliding window are skipped with pl.when —
+decode cost scales with the live cache, not the allocated one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                   scale, window, bk, nk):
+    ki = pl.program_id(2)
+    k_start = ki * bk
+    length = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _reset():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    live = k_start < length
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk > length - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        gk = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = gk < length
+        if window > 0:
+            mask &= gk >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot(p, v)
+        m_sc[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q1, k, v, length, *, window=0, block_k=256,
+                 interpret=False):
+    """q1 [B,H,hd]; k,v [B,KV,S,hd]; length scalar int32 (tokens live in
+    cache). Returns [B,H,hd]."""
+    B, H, hd = q1.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(block_k, S)
+    while S % bk:
+        bk -= 1
+    nk = S // bk
+    qg = q1.reshape(B, KV, G, hd)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5,
+                               window=window, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q1.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,60 @@
+"""Pallas TPU grouped (expert-batched) matmul for MoE expert FFNs.
+
+Grid (e, c_block, f_block, d_block): one [bc x bd] x [bd x bf] MXU tile per
+step with f32 accumulation in VMEM scratch across d blocks (innermost axis).
+Tiles default to 128 (MXU-aligned); the accumulator is written once at the
+last d block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_sc, *, nd):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _reset():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    x = x_ref[0].astype(jnp.float32)        # [bc, bd]
+    w = w_ref[0].astype(jnp.float32)        # [bd, bf]
+    acc_sc[...] += jax.lax.dot(x, w)
+
+    @pl.when(di == nd - 1)
+    def _write():
+        o_ref[0] = acc_sc[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x, w, *, block_c=128, block_f=128, block_d=128,
+                   interpret=False):
+    """x [E, C, d] @ w [E, d, f] -> [E, C, f]."""
+    E, C, d = x.shape
+    f = w.shape[-1]
+
+    def fit(b, s):
+        b = min(b, s)
+        while s % b:
+            b -= 1
+        return b
+
+    bc, bf, bd = fit(block_c, C), fit(block_f, f), fit(block_d, d)
+    nd = d // bd
+    kernel = functools.partial(_gmm_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // bc, f // bf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

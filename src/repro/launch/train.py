@@ -1,0 +1,136 @@
+"""End-to-end training driver.
+
+Two modes:
+  --mode spmd    one jitted pipelined wave step over a (data, stage, tp) mesh
+                 (WSP D=0; the production path — on CPU use a small mesh via
+                 --devices, which must be set before jax initializes, so this
+                 mode re-execs itself with XLA_FLAGS when needed)
+  --mode wsp     threaded multi-VW WSP runtime with the parameter server
+                 (true async D>=0, stragglers, checkpoint/restart, elastic)
+
+Example (CPU, reduced model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --mode wsp \
+      --reduced --waves 50 --num-vw 4 --D 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--mode", choices=("spmd", "wsp"), default="wsp")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--waves", type=int, default=50)
+    ap.add_argument("--num-vw", type=int, default=4)
+    ap.add_argument("--D", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compression", type=float, default=None)
+    ap.add_argument("--speeds", default=None,
+                    help="comma-separated per-VW slowdowns (s/wave)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="spmd mode: fake host device count (data*stage*tp)")
+    ap.add_argument("--mesh", default="2,2,2",
+                    help="spmd mode: data,stage,tp")
+    a = ap.parse_args()
+
+    if a.mode == "spmd" and a.devices and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={a.devices}"
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import ARCHS, reduced as make_reduced, RunConfig, \
+        ShapeConfig
+    from repro.models import lm
+    from repro.optim import make_optimizer
+    from repro.core import wave
+
+    cfg = ARCHS[a.arch]
+    if a.reduced:
+        dm, st, tp = a.d_model, 2, 1
+        heads = max(1, min(cfg.num_heads, 4)) if cfg.num_heads else 0
+        cfg = make_reduced(cfg, d_model=dm, d_ff=2 * dm, num_layers=a.layers,
+                           vocab_size=256, stages=st, tp=tp,
+                           num_heads=heads,
+                           num_kv_heads=max(1, heads // 2) if heads else 0,
+                           head_dim=dm // heads if heads else 0)
+    params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(a.optimizer, a.lr)
+    print(f"arch={cfg.name} params={sum(np.size(x) for x in jax.tree.leaves(params)):,}")
+
+    if a.mode == "wsp":
+        from repro.runtime.trainer import WSPTrainer
+        from repro.runtime.checkpoint import latest_checkpoint, \
+            load_checkpoint
+        step = wave.build_local_wave_step(cfg, cfg.num_microbatches, opt)
+        if a.resume and a.ckpt_dir:
+            path = latest_checkpoint(a.ckpt_dir)
+            if path:
+                out, meta = load_checkpoint(path, {"params": params})
+                params = out["params"]
+                print(f"resumed from {path} (step {meta['step']})")
+        speeds = ([float(s) for s in a.speeds.split(",")]
+                  if a.speeds else None)
+        tr = WSPTrainer(params, step, opt, num_vw=a.num_vw, D=a.D,
+                        batch=a.batch, seq=a.seq, vocab=cfg.vocab_size,
+                        max_waves=a.waves, speeds=speeds,
+                        compression_ratio=a.compression,
+                        ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every)
+        rep = tr.run()
+        xs, ys = rep.loss_curve()
+        print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
+              f"first_loss={ys[0]:.4f} last_loss={np.mean(ys[-5:]):.4f}")
+        print(f"pushed={rep.bytes_pushed/1e6:.1f}MB wire="
+              f"{rep.bytes_wire/1e6:.1f}MB waits={ {k: round(v,2) for k, v in rep.wait_seconds.items()} }")
+        return
+
+    # spmd mode
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
+    mesh = jax.make_mesh((dsz, ssz, tsz), ("data", "stage", "tp"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, stages=ssz, tp=tsz)
+    params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
+    shape = ShapeConfig("cli", a.seq, a.batch * dsz, "train")
+    run = RunConfig(arch=cfg, shape=shape, optimizer=a.optimizer, lr=a.lr,
+                    compute_dtype="float32", loss_chunk=min(512, a.seq))
+    step, _ = wave.build_train_step(run, mesh)
+    from repro.data.pipeline import MarkovLM, ShardedLoader
+    loader = ShardedLoader(MarkovLM(cfg.vocab_size), shape.global_batch,
+                           a.seq, 0, 1)
+    with jax.set_mesh(mesh):
+        p_sh = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P)))
+        opt_state = opt.init(p_sh)
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        for w in range(a.waves):
+            x, y = loader.next()
+            t0 = time.time()
+            p_sh, opt_state, m = jstep(p_sh, opt_state,
+                                       {"inputs": jnp.asarray(x),
+                                        "labels": jnp.asarray(y)})
+            if w % 5 == 0 or w == a.waves - 1:
+                print(f"wave {w:4d} loss={float(m['loss']):.4f} "
+                      f"({time.time()-t0:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

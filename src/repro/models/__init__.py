@@ -1,0 +1,1 @@
+"""Model zoo: layer-sequential LMs covering all assigned architecture families."""

@@ -1,0 +1,158 @@
+"""Attention: memory-efficient (flash-style) jnp implementations.
+
+These are the reference/dry-run paths; `repro.kernels` holds the Pallas TPU
+kernels with identical math. All softmax accumulation is fp32.
+
+Layouts: q [B, S, H, hd]; k, v [B, S, KV, hd]; GQA group G = H // KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pick_block(s: int, want: int) -> int:
+    b = min(want, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 256, kv_block: int = 512,
+                    q_offset: int = 0):
+    """Online-softmax attention, tiled over q and kv blocks.
+
+    window > 0 restricts to keys with (qpos - kpos) < window (sliding window).
+    q_offset: global position of q[0] (for prefill continuation; kv starts at 0).
+    NOTE (roofline): masked causal blocks are still computed in this jnp path
+    (~2x attention FLOPs); the Pallas kernel skips them on TPU.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qb = _pick_block(Sq, q_block)
+    kb = _pick_block(Sk, kv_block)
+    nq, nk = Sq // qb, Sk // kb
+    scale = hd ** -0.5
+
+    qr = q.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,KV,G,qb,hd]
+    kr = k.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)        # [nk,B,KV,kb,hd]
+    vr = v.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_blk):
+        qi, q_i = qi_blk
+        gq = q_offset + qi * qb + jnp.arange(qb)                      # [qb]
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_j, v_j = kj_blk
+            gk = kj * kb + jnp.arange(kb)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= gq[:, None] >= gk[None, :]
+            if window > 0:
+                mask &= (gq[:, None] - gk[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # outs [nq, B, KV, G, qb, hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, q_block: int = 256,
+                     q_offset: int = 0):
+    """Sliding-window attention with FLOPs proportional to S * (window + qb).
+
+    For each q block, gathers the contiguous kv band [start, start + window + qb)
+    via dynamic_slice instead of masking the full sequence.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qb = _pick_block(Sq, q_block)
+    nq = Sq // qb
+    band = window + qb
+    if band >= Sk:
+        return flash_attention(q, k, v, causal=True, window=window,
+                               q_block=q_block, q_offset=q_offset)
+    scale = hd ** -0.5
+    qr = q.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kt = k.transpose(0, 2, 1, 3)   # [B, KV, Sk, hd]
+    vt = v.transpose(0, 2, 1, 3)
+
+    def q_step(_, qi_blk):
+        qi, q_i = qi_blk
+        q0 = q_offset + qi * qb
+        start = jnp.clip(q0 + qb - band, 0, Sk - band)
+        k_b = jax.lax.dynamic_slice_in_dim(kt, start, band, axis=2)
+        v_b = jax.lax.dynamic_slice_in_dim(vt, start, band, axis=2)
+        gq = q0 + jnp.arange(qb)
+        gk = start + jnp.arange(band)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", q_i.astype(jnp.float32),
+                       k_b.astype(jnp.float32)) * scale
+        mask = (gq[:, None] >= gk[None, :]) & ((gq[:, None] - gk[None, :]) < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bkgqc,bkcd->bkgqd", p, v_b.astype(jnp.float32))
+        out = out / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attend(q1, k_cache, v_cache, gpos, pos, *, window: int = 0,
+                  merge_axis: str | None = None):
+    """Single-token attention against a (possibly sequence-sharded) KV cache.
+
+    q1 [B, 1, H, hd] (already roped at `pos`); k_cache/v_cache [B, Sc, KV, hd]
+    (the local shard); gpos [Sc] global positions of the cached slots; pos the
+    current global position. merge_axis: mesh axis name for flash-decoding
+    style logsumexp merge across sequence shards.
+    """
+    B, _, H, hd = q1.shape
+    _, Sc, KV, _ = k_cache.shape
+    G = H // KV
+    scale = hd ** -0.5
+    qr = q1.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qr, k_cache.astype(jnp.float32)) * scale
+    valid = (gpos <= pos) & (gpos >= 0)
+    if window > 0:
+        valid &= (pos - gpos) < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    if merge_axis is not None:
+        m_g = jax.lax.pmax(m_safe, merge_axis)
+        corr = jnp.exp(m_safe - m_g)
+        l = jax.lax.psum(l * corr, merge_axis)
+        o = jax.lax.psum(o * corr[..., None], merge_axis)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q1.dtype)

@@ -1,0 +1,90 @@
+"""The paper's own models (VGG-19, ResNet-152) for the allocation/partition
+benchmarks, plus a small runnable conv net for CPU smoke.
+
+The benchmarks need per-layer (flops, param_bytes, act_bytes) tables for the
+partitioner — derived analytically from the published architectures at
+224x224 (VGG-19: 19.6 GFLOPs/image, 548 MB params; ResNet-152: 11.3 GFLOPs,
+230 MB), the models the paper trains (Section 8.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VGG19_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+             512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+def vgg19_layer_costs(batch: int = 32):
+    """Per-layer (flops fwd+bwd, param_bytes, act_bytes) at 224x224."""
+    h = w = 224
+    cin = 3
+    fl, pb, ab = [], [], []
+    for v in VGG19_CFG:
+        if v == "M":
+            h //= 2
+            w //= 2
+            continue
+        f = 2 * batch * h * w * cin * v * 9            # 3x3 conv
+        fl.append(3.0 * f)
+        pb.append(cin * v * 9 * 4.0)
+        ab.append(batch * h * w * v * 4.0)
+        cin = v
+    # classifier: 25088->4096->4096->1000 (the bulk of VGG's 548MB)
+    for din, dout in ((512 * 49, 4096), (4096, 4096), (4096, 1000)):
+        fl.append(3.0 * 2 * batch * din * dout)
+        pb.append(din * dout * 4.0)
+        ab.append(batch * dout * 4.0)
+    return np.array(fl), np.array(pb), np.array(ab)
+
+
+def resnet152_layer_costs(batch: int = 32):
+    """Bottleneck-block granularity (stem + 8/64/36/3 blocks... 3,8,36,3)."""
+    stages = [(256, 64, 3, 56), (512, 128, 8, 28),
+              (1024, 256, 36, 14), (2048, 512, 3, 7)]
+    fl, pb, ab = [], [], []
+    fl.append(3.0 * 2 * batch * 112 * 112 * 3 * 64 * 49)     # 7x7 stem
+    pb.append(3 * 64 * 49 * 4.0)
+    ab.append(batch * 112 * 112 * 64 * 4.0)
+    for cout, mid, blocks, hw in stages:
+        for b in range(blocks):
+            cin = cout if b else (cout // 2 if cout > 256 else 64)
+            f = 2 * batch * hw * hw * (cin * mid + mid * mid * 9 + mid * cout)
+            p = (cin * mid + mid * mid * 9 + mid * cout) * 4.0
+            fl.append(3.0 * f)
+            pb.append(p)
+            ab.append(batch * hw * hw * cout * 4.0)
+    fl.append(3.0 * 2 * batch * 2048 * 1000)
+    pb.append(2048 * 1000 * 4.0)
+    ab.append(batch * 1000 * 4.0)
+    return np.array(fl), np.array(pb), np.array(ab)
+
+
+PAPER_MODELS = {"vgg19": vgg19_layer_costs, "resnet152": resnet152_layer_costs}
+
+
+# ---- small runnable conv net (CPU smoke) -----------------------------------
+def init_tiny_cnn(key, num_classes: int = 10, width: int = 8):
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": 0.1 * jax.random.normal(ks[0], (3, 3, 3, width)),
+        "c2": 0.1 * jax.random.normal(ks[1], (3, 3, width, 2 * width)),
+        "w": 0.1 * jax.random.normal(ks[2], (2 * width * 64, num_classes)),
+        "b": jnp.zeros((num_classes,)),
+    }
+
+
+def tiny_cnn_apply(p, x):
+    """x [B, 32, 32, 3] -> logits [B, classes]."""
+    y = jax.lax.conv_general_dilated(
+        x, p["c1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    y = jax.lax.conv_general_dilated(
+        y, p["c2"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    return y.reshape(y.shape[0], -1) @ p["w"] + p["b"]

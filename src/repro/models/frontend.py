@@ -1,0 +1,23 @@
+"""Modality frontend stubs for [audio] / [vlm] architectures.
+
+Per the assignment, these architectures specify the transformer BACKBONE only;
+the EnCodec / VQ-VAE frontends are stubs that produce precomputed frame/patch
+embeddings. For runnable examples we synthesize embeddings deterministically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def stub_embeddings(cfg: ArchConfig, key, batch: int, seq_len: int,
+                    dtype=jnp.float32):
+    """Deterministic stand-in for frontend output: [B, S, d_model]."""
+    return 0.02 * jax.random.normal(key, (batch, seq_len, cfg.d_model), dtype)
+
+
+def stub_labels(cfg: ArchConfig, key, batch: int, seq_len: int):
+    return jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size,
+                              dtype=jnp.int32)

@@ -1,0 +1,115 @@
+"""Primitive layers: norms, rope, MLPs, losses. Pure functions over dict params."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [...]; returns cos/sin [..., head_dim//2] fp32."""
+    ang = positions.astype(jnp.float32)[..., None] * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, hd]; cos/sin [S, hd//2] (broadcast over batch/heads)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# MLPs (all return the pre-output-projection activation given fused wi)
+# ----------------------------------------------------------------------------
+def mlp_act(h, mlp_type: str, d_ff: int):
+    """h = x @ wi where wi fuses [gate; up] for gated types."""
+    if mlp_type == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        return jax.nn.silu(g) * u
+    if mlp_type == "geglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        return jax.nn.gelu(g, approximate=True) * u
+    if mlp_type == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    if mlp_type == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(mlp_type)
+
+
+def mlp_fused_width(mlp_type: str, d_ff: int) -> int:
+    return (2 if mlp_type in ("swiglu", "geglu") else 1) * d_ff
+
+
+# ----------------------------------------------------------------------------
+# Loss: seq-chunked cross entropy against a (possibly tp-sharded) vocab head.
+# ----------------------------------------------------------------------------
+def chunked_cross_entropy(hidden, head, labels, *, chunk: int = 512,
+                          logits_scale: float = 1.0,
+                          valid_vocab: int | None = None):
+    """Mean CE over tokens; logits never materialized beyond [B, chunk, V].
+
+    hidden [B, S, d] - head [d, V] - labels [B, S] int32. Backward recomputes
+    per chunk (jax.checkpoint), keeping the dominant temp at chunk granularity.
+    """
+    B, S, d = hidden.shape
+    n_chunks = S // chunk if S % chunk == 0 else -1
+    if n_chunks == -1:  # fall back to single chunk
+        n_chunks, chunk = 1, S
+
+    hc = hidden.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(h, l):
+        # bf16 operands, f32 accumulation: halves CE weight/logit traffic
+        logits = jax.lax.dot_general(
+            h.astype(jnp.bfloat16), head.astype(jnp.bfloat16),
+            (((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * logits_scale
+        if valid_vocab is not None and valid_vocab < head.shape[-1]:
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+            logits = jnp.where(col < valid_vocab, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, xs):
+        h, l = xs
+        return acc + one(h, l), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)
+
+
+def init_dense(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)

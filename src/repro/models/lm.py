@@ -1,0 +1,418 @@
+"""Model assembly: parameter init (with sharding specs), per-layer metadata,
+stage application (used by the pipeline), KV/SSM caches, input specs, and a
+plain non-pipelined reference forward (correctness oracle for the pipeline).
+
+Parameter layout: block leaves are stacked over ALL layers on dim 0 with
+`padded_layers = stages * layer_slots` slots, sharded over the "stage" mesh
+axis (each pipeline stage receives its contiguous slice — the paper's
+contiguous-layer partitions). TP dims are sharded over "tp".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace as dc_replace
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, RunConfig
+from repro.models.blocks import LayerCtx, apply_layer
+from repro.models.layers import rms_norm, layer_norm, chunked_cross_entropy
+
+S_AX, T_AX, D_AX = "stage", "tp", "data"
+
+
+def padded_vocab(cfg: ArchConfig, mult: int = 16) -> int:
+    """Vocab padded for 16-way (stage x tp) sharding (Megatron-style);
+    padded logit columns are masked to -inf in the loss."""
+    return (cfg.vocab_size + mult - 1) // mult * mult
+
+
+# ----------------------------------------------------------------------------
+# Layer metadata
+# ----------------------------------------------------------------------------
+def layer_meta(cfg: ArchConfig) -> dict[str, np.ndarray]:
+    """Per-slot arrays, shaped [stages, slots] for stage-sharded consumption."""
+    kinds = np.array(cfg.layer_kinds(), np.int32)
+    Lp = cfg.padded_layers
+    valid = np.arange(Lp) < cfg.num_layers
+    kinds = np.where(valid, kinds, 2 if cfg.ssm_type == "rwkv6" else 0)
+    full_i = np.zeros(Lp, np.int32)
+    win_i = np.zeros(Lp, np.int32)
+    st, sl = cfg.stages, cfg.layer_slots
+    m_full = m_win = 0
+    for s in range(st):
+        nf = nw = 0
+        for j in range(sl):
+            l = s * sl + j
+            if valid[l] and kinds[l] == 0 and cfg.attn_type != "none":
+                full_i[l] = nf
+                nf += 1
+            elif valid[l] and kinds[l] == 1:
+                win_i[l] = nw
+                nw += 1
+        m_full, m_win = max(m_full, nf), max(m_win, nw)
+    rs = lambda a: a.reshape(st, sl)
+    return dict(kind=rs(kinds), valid=rs(valid), full_i=rs(full_i),
+                win_i=rs(win_i), m_full=m_full, m_win=m_win)
+
+
+def uniform_kind(cfg: ArchConfig) -> Optional[int]:
+    """Static layer kind if every (real) layer is identical, else None."""
+    if cfg.num_layers % cfg.stages:
+        return None
+    if cfg.attn_type == "full":
+        return 0
+    if cfg.attn_type == "swa":
+        return 1
+    if cfg.attn_type == "none":
+        return 2
+    return None
+
+
+# ----------------------------------------------------------------------------
+# Parameter init + specs
+# ----------------------------------------------------------------------------
+def _block_shapes(cfg: ArchConfig) -> dict[str, tuple[tuple, P, str]]:
+    """leaf -> (per-layer shape, spec (without the leading stage dim), init)."""
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G = 2 if cfg.mlp_type in ("swiglu", "geglu") else 1
+    tp_ax = T_AX if cfg.tp > 1 else None
+    kv_tp = tp_ax if (KV and cfg.tp > 1 and KV % cfg.tp == 0) else None
+    out: dict[str, tuple[tuple, P, str]] = {}
+
+    def norm(name):
+        out[name] = ((d,), P(None), "zeros" if "rms" in cfg.norm_style
+                     else "ones")
+        if cfg.norm_style == "ln_pre":
+            out[name + "_b"] = ((d,), P(None), "zeros")
+
+    if cfg.ssm_type == "rwkv6":
+        Hs, hds = cfg.n_ssm_heads, d // cfg.n_ssm_heads
+        out["ln1"] = ((d,), P(None), "zeros")
+        out["ln2"] = ((d,), P(None), "zeros")
+        for m in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+            out[m] = ((d,), P(None), "half")
+        for w in ("wr", "wk", "wv", "wg"):
+            out[w] = ((d, d), P(None, None), "normal")
+        out["wo"] = ((d, d), P(None, None), "normal_out")
+        out["w0"] = ((d,), P(None), "w0")
+        out["wa"] = ((d, 64), P(None, None), "zeros")
+        out["wb"] = ((64, d), P(None, None), "zeros")
+        out["u"] = ((Hs, hds), P(None, None), "half")
+        out["gn_scale"] = ((d,), P(None), "ones")
+        out["gn_bias"] = ((d,), P(None), "zeros")
+        out["cm_mu_k"] = ((d,), P(None), "half")
+        out["cm_mu_r"] = ((d,), P(None), "half")
+        out["cm_k"] = ((d, ff), P(None, None), "normal")
+        out["cm_v"] = ((ff, d), P(None, None), "normal_out")
+        out["cm_r"] = ((d, d), P(None, None), "normal")
+        return out
+
+    norm("ln1")
+    out["wq"] = ((d, H * hd), P(None, tp_ax), "normal")
+    out["wk"] = ((d, KV * hd), P(None, kv_tp), "normal")
+    out["wv"] = ((d, KV * hd), P(None, kv_tp), "normal")
+    out["wo"] = ((H * hd, d), P(tp_ax, None), "normal_out")
+    if cfg.qk_norm:
+        out["q_norm"] = ((hd,), P(None), "zeros")
+        out["k_norm"] = ((hd,), P(None), "zeros")
+    if cfg.norm_style == "rms_sandwich":
+        out["ln1_post"] = ((d,), P(None), "zeros")
+        out["ln2_post"] = ((d,), P(None), "zeros")
+    norm("ln2")
+    if cfg.num_experts:
+        E = cfg.num_experts
+        out["router"] = ((d, E), P(None, None), "normal")
+        out["moe_w_in"] = ((E, d, G, ff), P(None, None, None, tp_ax), "normal")
+        out["moe_w_out"] = ((E, ff, d), P(None, tp_ax, None), "normal_out")
+    else:
+        out["mlp_wi"] = ((d, G, ff), P(None, None, tp_ax), "normal")
+        out["mlp_wo"] = ((ff, d), P(tp_ax, None), "normal_out")
+    if cfg.hybrid_parallel:
+        di, N, Hs = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        out["bn_attn"] = ((d,), P(None), "zeros")
+        out["bn_ssm"] = ((d,), P(None), "zeros")
+        out["ssd_in_proj"] = ((d, 2 * di + 2 * N + Hs), P(None, None), "normal")
+        out["ssd_conv_w"] = ((4, di + 2 * N), P(None, None), "normal")
+        out["ssd_dt_bias"] = ((Hs,), P(None), "dt_bias")
+        out["ssd_A_log"] = ((Hs,), P(None), "a_log")
+        out["ssd_D"] = ((Hs,), P(None), "ones")
+        out["ssd_norm_scale"] = ((di,), P(None), "zeros")
+        out["ssd_out_proj"] = ((di, d), P(None, None), "normal_out")
+    return out
+
+
+def _init_leaf(key, shape, init, cfg: ArchConfig, dtype):
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "half":
+        return jnp.full(shape, 0.5, dtype)
+    if init == "w0":
+        return jnp.full(shape, -5.0, dtype)
+    if init == "dt_bias":
+        return jnp.full(shape, -4.6, dtype)
+    if init == "a_log":
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[-1])).astype(dtype)
+    scale = 0.02
+    if init == "normal_out":
+        scale = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def param_specs(cfg: ArchConfig):
+    """Sharding-spec pytree matching init_params, without any allocation."""
+    shapes = _block_shapes(cfg)
+    specs = {"blocks": {n: P(S_AX, *spec) for n, (_, spec, _) in
+                        sorted(shapes.items())},
+             "final_norm": P(None)}
+    if cfg.norm_style == "ln_pre":
+        specs["final_norm_b"] = P(None)
+    if cfg.frontend == "none":
+        specs["embed"] = P((S_AX, T_AX), None)
+    if not cfg.tie_embeddings:
+        specs["head"] = P(None, (S_AX, T_AX))
+    return specs
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree matching init_params (no allocation)."""
+    shapes = _block_shapes(cfg)
+    Lp = cfg.padded_layers
+    blocks = {n: jax.ShapeDtypeStruct((Lp,) + shp, dtype)
+              for n, (shp, _, _) in sorted(shapes.items())}
+    out = {"blocks": blocks,
+           "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dtype)}
+    if cfg.norm_style == "ln_pre":
+        out["final_norm_b"] = jax.ShapeDtypeStruct((cfg.d_model,), dtype)
+    Vp = padded_vocab(cfg)
+    if cfg.frontend == "none":
+        out["embed"] = jax.ShapeDtypeStruct((Vp, cfg.d_model), dtype)
+    if not cfg.tie_embeddings:
+        out["head"] = jax.ShapeDtypeStruct((cfg.d_model, Vp), dtype)
+    return out
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
+    """Returns (params, specs) with block leaves stacked [padded_layers, ...]."""
+    shapes = _block_shapes(cfg)
+    Lp = cfg.padded_layers
+    keys = jax.random.split(key, len(shapes) + 3)
+    blocks, bspecs = {}, {}
+    for i, (name, (shp, spec, init)) in enumerate(sorted(shapes.items())):
+        def one(k):
+            return _init_leaf(k, shp, init, cfg, dtype)
+        blocks[name] = jax.vmap(one)(jax.random.split(keys[i], Lp))
+        bspecs[name] = P(S_AX, *spec)
+    params = {"blocks": blocks,
+              "final_norm": jnp.zeros((cfg.d_model,), dtype)
+              if cfg.norm_style != "ln_pre" else jnp.ones((cfg.d_model,), dtype)}
+    specs = {"blocks": bspecs, "final_norm": P(None)}
+    if cfg.norm_style == "ln_pre":
+        params["final_norm_b"] = jnp.zeros((cfg.d_model,), dtype)
+        specs["final_norm_b"] = P(None)
+    Vp = padded_vocab(cfg)
+    if cfg.frontend == "none":
+        params["embed"] = _init_leaf(keys[-2], (Vp, cfg.d_model),
+                                     "normal", cfg, dtype)
+        specs["embed"] = P((S_AX, T_AX), None)
+    if not cfg.tie_embeddings:
+        params["head"] = _init_leaf(keys[-1], (cfg.d_model, Vp),
+                                    "normal", cfg, dtype)
+        specs["head"] = P(None, (S_AX, T_AX))
+    return params, specs
+
+
+# ----------------------------------------------------------------------------
+# Embedding / loss (outside the pipeline shard_map; GSPMD-sharded)
+# ----------------------------------------------------------------------------
+def embed_tokens(cfg: ArchConfig, params, tokens_or_embeds):
+    if cfg.frontend != "none":
+        x = tokens_or_embeds           # precomputed frame/patch embeddings
+    else:
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def final_hidden_norm(cfg: ArchConfig, params, h):
+    if cfg.norm_style == "ln_pre":
+        return layer_norm(h, params["final_norm"], params["final_norm_b"],
+                          eps=cfg.norm_eps)
+    return rms_norm(h, params["final_norm"], eps=cfg.norm_eps)
+
+
+def head_matrix(cfg: ArchConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def lm_loss(cfg: ArchConfig, params, hidden, labels, *, chunk=512):
+    h = final_hidden_norm(cfg, params, hidden)
+    return chunked_cross_entropy(h, head_matrix(cfg, params), labels,
+                                 chunk=min(chunk, h.shape[1]),
+                                 valid_vocab=cfg.vocab_size)
+
+
+# ----------------------------------------------------------------------------
+# Stage application (unrolled layer slots; used inside the pipeline shard_map)
+# ----------------------------------------------------------------------------
+def stage_apply(cfg: ArchConfig, blocks_local, x, meta_local, ctx: LayerCtx,
+                cache_local=None):
+    """blocks_local: leaves [slots, ...] (this stage's slice).
+    meta_local: dict of [slots] arrays (kind/valid/full_i/win_i).
+    Returns (x, cache_local, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    uk = uniform_kind(cfg)
+    for s in range(cfg.layer_slots):
+        p_l = jax.tree.map(lambda a: a[s], blocks_local)
+        ctx_s = dc_replace(
+            ctx,
+            kind=uk if uk is not None else meta_local["kind"][s],
+            valid=True if uk is not None else meta_local["valid"][s],
+            full_i=meta_local["full_i"][s],
+            win_i=meta_local["win_i"][s],
+            ssm_i=s,
+        )
+        x, cache_local, a = apply_layer(cfg, p_l, x, ctx_s, cache_local)
+        aux = aux + a
+    return x, cache_local, aux
+
+
+# ----------------------------------------------------------------------------
+# Caches
+# ----------------------------------------------------------------------------
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int, *,
+                 seq_shards: int = 1, dtype=jnp.bfloat16):
+    """Returns (cache_shapes pytree of ShapeDtypeStruct, specs pytree).
+
+    Cache group layout (global):
+      kv_full [stages*m_full, B, S, KV, hd]   (seq possibly sharded over data)
+      kv_win  [stages*m_win,  B, W, KV, hd]
+      ssm_state [Lp, B, H, K, P] fp32 ; conv_tail/shift small
+    """
+    meta = layer_meta(cfg)
+    st = cfg.stages
+    Lp = cfg.padded_layers
+    kv_tp = T_AX if (cfg.num_kv_heads and cfg.tp > 1
+                     and cfg.num_kv_heads % cfg.tp == 0) else None
+    batch_ax = D_AX if batch >= 16 else None
+    seq_ax = D_AX if seq_shards > 1 else None
+    shapes, specs = {}, {}
+    hd, KV = cfg.head_dim, cfg.num_kv_heads
+    if meta["m_full"] > 0 and cfg.attn_type != "none":
+        shp = (st * meta["m_full"], batch, max_len, KV, hd)
+        shapes["kv_full"] = tuple(jax.ShapeDtypeStruct(shp, dtype)
+                                  for _ in range(2))
+        specs["kv_full"] = tuple(P(S_AX, batch_ax, seq_ax, kv_tp, None)
+                                 for _ in range(2))
+    if meta["m_win"] > 0:
+        W = min(cfg.window_size, max_len)
+        shp = (st * meta["m_win"], batch, W, KV, hd)
+        shapes["kv_win"] = tuple(jax.ShapeDtypeStruct(shp, dtype)
+                                 for _ in range(2))
+        specs["kv_win"] = tuple(P(S_AX, batch_ax, None, kv_tp, None)
+                                for _ in range(2))
+    if cfg.ssm_type == "ssd":
+        H, N, Pd = cfg.n_ssm_heads, cfg.ssm_state, cfg.d_inner // cfg.n_ssm_heads
+        shapes["ssm_state"] = jax.ShapeDtypeStruct((Lp, batch, H, N, Pd),
+                                                   jnp.float32)
+        specs["ssm_state"] = P(S_AX, batch_ax, None, None, None)
+        shapes["conv_tail"] = jax.ShapeDtypeStruct(
+            (Lp, batch, 3, cfg.d_inner + 2 * N), dtype)
+        specs["conv_tail"] = P(S_AX, batch_ax, None, None)
+    if cfg.ssm_type == "rwkv6":
+        H = cfg.n_ssm_heads
+        hds = cfg.d_model // H
+        shapes["ssm_state"] = jax.ShapeDtypeStruct((Lp, batch, H, hds, hds),
+                                                   jnp.float32)
+        specs["ssm_state"] = P(S_AX, batch_ax, None, None, None)
+        shapes["shift"] = jax.ShapeDtypeStruct((Lp, batch, 2, cfg.d_model),
+                                               dtype)
+        specs["shift"] = P(S_AX, batch_ax, None, None)
+    return shapes, specs
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, seq_shards=1,
+               dtype=jnp.bfloat16):
+    shapes, _ = cache_struct(cfg, batch, max_len, seq_shards=seq_shards,
+                             dtype=dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ----------------------------------------------------------------------------
+# Reference (non-pipelined, single-device) forward — the pipeline oracle
+# ----------------------------------------------------------------------------
+def forward_ref(cfg: ArchConfig, params, tokens_or_embeds, *, mode="train",
+                cache=None, pos=None, labels=None):
+    """Plain layer loop. Returns (loss or hidden, cache, aux)."""
+    x = embed_tokens(cfg, params, tokens_or_embeds)
+    meta = layer_meta(cfg)
+    aux_t = jnp.zeros((), jnp.float32)
+    Lp = cfg.padded_layers
+    kinds = meta["kind"].reshape(-1)
+    valid = meta["valid"].reshape(-1)
+    full_i = meta["full_i"].reshape(-1)
+    win_i = meta["win_i"].reshape(-1)
+    sl = cfg.layer_slots
+    for l in range(Lp):
+        if not valid[l]:
+            continue
+        st_idx = l // sl
+        # reference runs with global cache (stage-major group indexing)
+        ctx = LayerCtx(mode=mode, pos=pos, kind=int(kinds[l]),
+                       full_i=int(st_idx * meta["m_full"] + full_i[l]),
+                       win_i=int(st_idx * meta["m_win"] + win_i[l]),
+                       ssm_i=l, valid=True)
+        p_l = jax.tree.map(lambda a: a[l], params["blocks"])
+        x, cache, a = apply_layer(cfg, p_l, x, ctx, cache)
+        aux_t = aux_t + a
+    if mode == "train" and labels is not None:
+        return lm_loss(cfg, params, x, labels) + 0.01 * aux_t / max(
+            cfg.num_layers, 1), cache, aux_t
+    return x, cache, aux_t
+
+
+def logits_ref(cfg: ArchConfig, params, hidden):
+    h = final_hidden_norm(cfg, params, hidden)
+    logits = h.astype(jnp.float32) @ head_matrix(cfg, params).astype(
+        jnp.float32)
+    return logits[..., : cfg.vocab_size]
+
+
+# ----------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ----------------------------------------------------------------------------
+def input_specs(run: RunConfig) -> dict[str, Any]:
+    """Model inputs for the jitted step of this (arch, shape) cell."""
+    cfg, shp = run.arch, run.shape
+    B, S = shp.global_batch, shp.seq_len
+    stub = cfg.frontend != "none"
+    dt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+    if shp.kind == "train":
+        inp = (jax.ShapeDtypeStruct((B, S, cfg.d_model), dt) if stub
+               else jax.ShapeDtypeStruct((B, S), jnp.int32))
+        return {"inputs": inp,
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    cache_dt = {"f8": jnp.float8_e4m3fn, "": dt}.get(run.cache_dtype, dt)
+    if shp.kind == "prefill":
+        inp = (jax.ShapeDtypeStruct((B, S, cfg.d_model), dt) if stub
+               else jax.ShapeDtypeStruct((B, S), jnp.int32))
+        cache, _ = cache_struct(cfg, B, S, dtype=cache_dt)
+        return {"inputs": inp, "cache": cache}
+    # decode: one token against a cache of seq_len
+    seq_shards = 16 if B < 16 else 1
+    inp = (jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt) if stub
+           else jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    cache, _ = cache_struct(cfg, B, S, seq_shards=seq_shards, dtype=cache_dt)
+    return {"inputs": inp, "cache": cache,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts: top-k routing with static capacity dispatch (TPU-friendly,
+no dynamic shapes). Scatter-based dispatch keeps memory at O(T*k + E*C*d).
+
+Expert compute is an expert-batched GEMM (einsum 'ecd,edgf->ecgf'), which the
+Pallas grouped-matmul kernel (repro.kernels.moe_gmm) accelerates on TPU.
+
+Weight layout (TP-shardable on the ff dim): w_in [E, d, G, ff], w_out [E, ff, d]
+where G = 2 for gated MLPs (gate; up) and 1 otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def route_topk(logits, top_k: int):
+    """logits [T, E] -> (weights [T,k], idx [T,k], aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * p_e
+    E = logits.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(idx, E, dtype=jnp.float32)      # [T,k,E]
+    fe = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)
+    aux = E * jnp.sum(me * fe)
+    return w, idx, aux
+
+
+def _expert_ffn(h_in, w_in, w_out, mlp_type):
+    h = jnp.einsum("ecd,edgf->ecgf", h_in, w_in.astype(h_in.dtype))
+    if mlp_type == "swiglu":
+        a = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    elif mlp_type == "geglu":
+        a = jax.nn.gelu(h[..., 0, :], approximate=True) * h[..., 1, :]
+    elif mlp_type == "gelu":
+        a = jax.nn.gelu(h[..., 0, :], approximate=True)
+    else:
+        r = jax.nn.relu(h[..., 0, :])
+        a = r * r
+    return jnp.einsum("ecf,efd->ecd", a, w_out.astype(h_in.dtype))
+
+
+def moe_mlp(p, x, *, num_experts: int, top_k: int, mlp_type: str,
+            capacity_factor: float = 1.25, ep_axis: str | None = None):
+    """x [B, S, d] -> ([B, S, d] partial if ff is tp-sharded, aux loss).
+
+    p: router [d, E], w_in [E, d, G, ffl], w_out [E, ffl, d].
+    ep_axis: optional mesh axis for expert parallelism — w_in/w_out then hold
+    the local expert shard and tokens are exchanged with all_to_all.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, K = num_experts, top_k
+    xf = x.reshape(T, d)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    w, idx, aux = route_topk(logits, K)
+
+    cap = int(max(K, round(T * K / E * capacity_factor)))
+    cap = max(4, (cap + 3) // 4 * 4)
+
+    # position of each (token, choice) within its expert queue
+    flat_e = idx.reshape(-1)                                  # [T*K]
+    one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # [T*K, E]
+    pos = jnp.cumsum(one_hot, axis=0) - 1                     # running count
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    dest = jnp.where(keep, flat_e * cap + slot, E * cap)      # drop bucket
+
+    buf = jnp.zeros((E * cap + 1, d), xf.dtype)
+    src = jnp.repeat(xf, K, axis=0)                           # [T*K, d]
+    buf = buf.at[dest].set(src)
+    expert_in = buf[:-1].reshape(E, cap, d)
+
+    if ep_axis is not None:
+        n_shard = jax.lax.axis_size(ep_axis)
+        expert_in = expert_in.reshape(n_shard, E // n_shard, cap, d)
+        expert_in = jax.lax.all_to_all(expert_in, ep_axis, split_axis=0,
+                                       concat_axis=2)
+        expert_in = expert_in.reshape(E // n_shard, n_shard * cap, d)
+
+    out = _expert_ffn(expert_in, p["w_in"], p["w_out"], mlp_type)
+
+    if ep_axis is not None:
+        n_shard = jax.lax.axis_size(ep_axis)
+        out = out.reshape(E // n_shard, n_shard, cap, d).transpose(1, 0, 2, 3)
+        out = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0)
+        out = out.reshape(E, cap, d)
+
+    flat_out = jnp.concatenate(
+        [out.reshape(E * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = flat_out[dest].reshape(T, K, d)
+    combined = jnp.einsum("tkd,tk->td", gathered.astype(jnp.float32),
+                          w * keep.reshape(T, K))
+    return combined.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,225 @@
+"""SSM mixers: RWKV6 (Finch, data-dependent decay) and Mamba-2 style SSD.
+
+Both are implemented in a chunked, matmul-dominant form (MXU-friendly; the
+Pallas kernels in repro.kernels mirror the same math) plus a single-token
+recurrent step for decoding. fp32 state/accumulation throughout.
+
+RWKV6 per head (state S in R^{K x V}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with per-channel data-dependent decay w_t = exp(-exp(clip(w0 + lora(x)))).
+
+SSD per head (state h in R^{N x P}, scalar per-head decay):
+    h_t = exp(a * dt_t) h_{t-1} + dt_t B_t x_t^T
+    y_t = h_t^T C_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+# decay-rate clamp keeping exp(-cs) representable for chunk <= 16 (see DESIGN.md)
+_LOGW_CLIP = (-8.0, 1.386)  # max per-step rate e^1.386 = 4.0
+
+
+def rwkv6_decay(x, w0, wa, wb):
+    """Per-channel log-decay (<= 0): -exp(clip(w0 + tanh(x wa) wb))."""
+    lora = jnp.tanh(x.astype(jnp.float32) @ wa.astype(jnp.float32))
+    raw = w0.astype(jnp.float32) + lora @ wb.astype(jnp.float32)
+    return -jnp.exp(jnp.clip(raw, *_LOGW_CLIP))
+
+
+def _shift(x, prev):
+    """Token shift: returns x_{t-1} with prev (or zeros) for t=0. x [B,S,d]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_projections(p, xx, prev_xx, heads):
+    """Token-shifted projections. xx [B,S,d] (post-ln). Returns r,k,v,g,logw,u."""
+    B, S, d = xx.shape
+    hd = d // heads
+    xp = _shift(xx, prev_xx)
+
+    def mix(mu):
+        return xx + mu * (xp - xx)
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(B, S, heads, hd)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(B, S, heads, hd)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(B, S, heads, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    logw = rwkv6_decay(mix(p["mu_w"]), p["w0"], p["wa"], p["wb"])
+    logw = logw.reshape(B, S, heads, hd)
+    return r, k, v, g, logw
+
+
+def _rwkv_head_out(p, y, g, heads):
+    """Per-head group norm, gating and output projection. y [B,S,H,hd] fp32."""
+    B, S, H, hd = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(B, S, H * hd) * p["gn_scale"] + p["gn_bias"]
+    out = (yn * g).astype(p["wo"].dtype) @ p["wo"]
+    return out
+
+
+def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None, prev_xx=None):
+    """Chunked RWKV6 time-mix. xx [B,S,d]. Returns y, final_state, last_xx."""
+    B, S, d = xx.shape
+    hd = d // heads
+    r, k, v, g, logw = rwkv6_projections(p, xx, prev_xx, heads)
+    u = p["u"].astype(jnp.float32)                          # [H, hd]
+    if state0 is None:
+        state0 = jnp.zeros((B, heads, hd, hd), jnp.float32)
+
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    n = S // C
+
+    def chz(a):   # [B,S,H,x] -> [n,B,C,H,x]
+        return a.reshape(B, n, C, *a.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(chz, (r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), logw))
+
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)     # strict lower
+
+    def chunk_step(S0, xs):
+        r_, k_, v_, w_ = xs                                  # [B,C,H,*]
+        cs = jnp.cumsum(w_, axis=1)                          # [B,C,H,K] (<=0)
+        cs_prev = cs - w_                                    # cs_{t-1} (cs_0 = 0)
+        r_p = r_ * jnp.exp(cs_prev)
+        k_p = k_ * jnp.exp(-cs)
+        scores = jnp.einsum("bthi,bshi->bhts", r_p, k_p) * tri[None, None]
+        diag = jnp.einsum("bthi,hi,bthi->bth", r_, u, k_)    # u-bonus on t==s
+        y = jnp.einsum("bhts,bshj->bthj", scores, v_)
+        y += diag[..., None] * v_
+        y += jnp.einsum("bthi,bhij->bthj", r_p, S0)          # inter-chunk
+        S_new = jnp.exp(cs[:, -1])[..., None] * (
+            S0 + jnp.einsum("bshi,bshj->bhij", k_p, v_))
+        return S_new, y
+
+    stateT, yc = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, heads, hd)
+    out = _rwkv_head_out(p, y, g, heads)
+    return out.astype(xx.dtype), stateT, xx[:, -1:]
+
+
+def rwkv6_mix_step(p, xx, state, prev_xx, *, heads: int):
+    """Single-token RWKV6 step. xx [B,1,d]; state [B,H,hd,hd] fp32."""
+    B, _, d = xx.shape
+    hd = d // heads
+    r, k, v, g, logw = rwkv6_projections(p, xx, prev_xx, heads)
+    r, k, v, w = (a[:, 0].astype(jnp.float32) for a in (r, k, v, logw))
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    state = jnp.exp(w)[..., None] * state + kv
+    out = _rwkv_head_out(p, y[:, None].reshape(B, 1, heads, hd), g, heads)
+    return out.astype(xx.dtype), state, xx
+
+
+# ----------------------------------------------------------------------------
+# SSD (Mamba-2 style), scalar-per-head decay
+# ----------------------------------------------------------------------------
+def _dw_conv4(x, w, tail=None):
+    """Causal depthwise conv, kernel 4, via shifts. x [B,S,c]; w [4,c];
+    tail [B,3,c] previous inputs (decode continuity)."""
+    B, S, c = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, 3, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)            # [B, S+3, c]
+    out = sum(xp[:, 3 - i: 3 - i + S] * w[3 - i] for i in range(4))
+    return out, xp[:, -3:]
+
+
+def ssd_projections(p, x, cfg_heads, d_inner, d_state, conv_tail=None):
+    """in_proj + conv + activations. x [B,S,d]. Returns z,xh,Bm,Cm,dt,tail."""
+    B, S, _ = x.shape
+    H, N = cfg_heads, d_state
+    proj = x @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
+    xbc, tail = _dw_conv4(xbc, p["conv_w"], conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    return z, xh.reshape(B, S, H, d_inner // H), Bm, Cm, dt, tail
+
+
+def ssd_mix(p, x, *, heads: int, d_state: int, d_inner: int, chunk: int = 64,
+            state0=None, conv_tail=None):
+    """Chunked SSD. x [B,S,d]. Returns y [B,S,d], final_state, conv_tail."""
+    B, S, d = x.shape
+    H, N, P = heads, d_state, d_inner // heads
+    z, xh, Bm, Cm, dt, tail = ssd_projections(p, x, H, d_inner, N, conv_tail)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H], < 0
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    C_ = min(chunk, S)
+    while S % C_:
+        C_ -= 1
+    n = S // C_
+
+    def chz(arr):
+        return arr.reshape(B, n, C_, *arr.shape[2:]).transpose(
+            1, 0, 2, *range(3, arr.ndim + 1))
+
+    xc = chz(xh.astype(jnp.float32))                    # [n,B,C,H,P]
+    Bc = chz(Bm.astype(jnp.float32))                    # [n,B,C,N]
+    Cc = chz(Cm.astype(jnp.float32))
+    dtc = chz(dt)                                       # [n,B,C,H]
+
+    def chunk_step(h0, xs):
+        x_, B_, C_m, dt_ = xs
+        la = dt_ * a                                    # [B,C,H] log-decay <= 0
+        cs = jnp.cumsum(la, axis=1)
+        # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cs_t - cs_s) * dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", C_m, B_)
+        L = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])      # [B,t,s,H]
+        L = jnp.where(jnp.tril(jnp.ones((L.shape[1], L.shape[1]), bool))[
+            None, :, :, None], L, 0.0)
+        y = jnp.einsum("bts,btsh,bsh,bshp->bthp", cb, L, dt_, x_)
+        # inter-chunk: y_t += (C_t exp(cs_t)) . h0
+        y += jnp.einsum("btn,bth,bhnp->bthp", C_m, jnp.exp(cs), h0)
+        # state update
+        dec = jnp.exp(cs[:, -1:, :] - cs)               # [B,C,H]
+        h_new = jnp.exp(cs[:, -1])[..., None, None] * h0 + jnp.einsum(
+            "bsn,bsh,bshp->bhnp", B_, dec * dt_, x_)
+        return h_new, y
+
+    stateT, yc = jax.lax.scan(chunk_step, state0, (xc, Bc, Cc, dtc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z)
+    out = y.astype(p["out_proj"].dtype) @ p["out_proj"]
+    return out.astype(x.dtype), stateT, tail
+
+
+def ssd_mix_step(p, x, state, conv_tail, *, heads: int, d_state: int,
+                 d_inner: int):
+    """Single-token SSD step. x [B,1,d]."""
+    B, _, d = x.shape
+    H, N, P = heads, d_state, d_inner // heads
+    z, xh, Bm, Cm, dt, tail = ssd_projections(p, x, H, d_inner, N, conv_tail)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    la = dt[:, 0] * a                                   # [B,H]
+    x0 = xh[:, 0].astype(jnp.float32)                   # [B,H,P]
+    B0 = Bm[:, 0].astype(jnp.float32)                   # [B,N]
+    C0 = Cm[:, 0].astype(jnp.float32)
+    state = jnp.exp(la)[..., None, None] * state + jnp.einsum(
+        "bn,bh,bhp->bhnp", B0, dt[:, 0], x0)
+    y = jnp.einsum("bn,bhnp->bhp", C0, state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x0
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z)
+    out = y.astype(p["out_proj"].dtype) @ p["out_proj"]
+    return out.astype(x.dtype), state, tail

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (
+    Optimizer, make_optimizer, sgd, momentum, adamw, warmup_cosine,
+)

@@ -1,0 +1,96 @@
+"""Delta-producing optimizers.
+
+WSP's parameter servers apply *additive deltas* (w_global += u). Local
+optimizers therefore transform wave gradients into deltas; adaptive state
+(momentum/Adam moments) stays virtual-worker-local, exactly as parameter-server
+deployments run adaptive optimizers. The WSP convergence proof covers SGD;
+momentum/AdamW are provided for the LM examples (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> state
+    update: Callable          # (grads, state, params, step) -> (deltas, state)
+    name: str = ""
+
+
+def _tree_zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        lr_t = lr(state["step"]) if callable(lr) else lr
+        deltas = jax.tree.map(lambda g: -lr_t * g, grads)
+        return deltas, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr, mu=0.9):
+    def init(params):
+        return {"m": _tree_zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        lr_t = lr(state["step"]) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: mu * m_ + g, state["m"], grads)
+        deltas = jax.tree.map(lambda m_: -lr_t * m_, m)
+        return deltas, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+    def init(params):
+        return {"m": _tree_zeros(params), "v": _tree_zeros(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        t = state["step"] + 1
+        lr_t = lr(state["step"]) if callable(lr) else lr
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def delta(m_, v_, p):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return -lr_t * (upd + weight_decay * p)
+
+        deltas = jax.tree.map(delta, m, v, params)
+        return deltas, {"m": m, "v": v, "step": t}
+
+    return Optimizer(init, update, "adamw")
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.1) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    raise ValueError(name)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr

@@ -1,0 +1,157 @@
+"""Multi-virtual-worker WSP trainer: the host-level HetPipe runtime.
+
+Spawns N VirtualWorker threads against a sharded ParameterServer, with
+simulated heterogeneous speeds / stragglers, periodic checkpointing, elastic
+worker removal & re-join, and an AllReduce-BSP baseline ("Horovod" analogue)
+for the paper's comparison experiments.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.param_server import ParameterServer
+from repro.data.pipeline import MarkovLM, ShardedLoader
+from repro.runtime.checkpoint import save_checkpoint, load_checkpoint
+from repro.runtime.virtual_worker import VirtualWorker
+
+
+@dataclass
+class TrainReport:
+    losses: list = field(default_factory=list)      # (wall_s, wid, loss)
+    waves: int = 0
+    wall_s: float = 0.0
+    wait_seconds: dict = field(default_factory=dict)
+    bytes_pushed: int = 0
+    bytes_wire: int = 0
+
+    def loss_curve(self):
+        pts = sorted(self.losses)
+        return (np.array([p[0] for p in pts]),
+                np.array([p[2] for p in pts]))
+
+
+class WSPTrainer:
+    def __init__(self, init_params, wave_step: Callable, optimizer, *,
+                 num_vw: int, D: int = 0, batch: int = 8, seq: int = 64,
+                 vocab: int = 256, max_waves: int = 20,
+                 speeds: Optional[list[float]] = None,
+                 straggle_fns: Optional[list] = None,
+                 compression_ratio: Optional[float] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 fail_at: Optional[dict[int, int]] = None,
+                 data_seed: int = 0, pull_every: int = 1):
+        self.ps = ParameterServer(init_params, D=D,
+                                  compression_ratio=compression_ratio)
+        self.wave_step, self.optimizer = wave_step, optimizer
+        self.num_vw, self.max_waves = num_vw, max_waves
+        self.batch, self.seq = batch, seq
+        self.speeds = speeds or [0.0] * num_vw
+        self.straggle_fns = straggle_fns or [None] * num_vw
+        self.source = MarkovLM(vocab, seed=data_seed)
+        self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
+        self.fail_at = fail_at or {}
+        self.pull_every = pull_every
+        self.stop_event = threading.Event()
+        self.workers: dict[str, VirtualWorker] = {}
+
+    def _make_worker(self, i: int, wid: str) -> VirtualWorker:
+        loader = ShardedLoader(self.source, self.batch, self.seq, i,
+                               self.num_vw, seed=17)
+        return VirtualWorker(
+            wid, self.ps, self.wave_step, loader,
+            self.optimizer.init(self.ps.pull()),
+            max_waves=self.max_waves, pull_every=self.pull_every,
+            slowdown=self.speeds[i],
+            straggle_fn=self.straggle_fns[i],
+            stop_event=self.stop_event,
+            fail_at_wave=self.fail_at.get(i))
+
+    def run(self, *, rejoin_failed_after: Optional[float] = None
+            ) -> TrainReport:
+        t0 = time.monotonic()
+        for i in range(self.num_vw):
+            wid = f"vw{i}"
+            self.workers[wid] = self._make_worker(i, wid)
+            self.workers[wid].start()
+        ckpt_step = 0
+        rejoined = set()
+        while any(w.is_alive() for w in self.workers.values()):
+            time.sleep(0.05)
+            # elastic re-join of failed workers
+            if rejoin_failed_after is not None:
+                for wid, w in list(self.workers.items()):
+                    if (w.failed and not w.is_alive() and wid not in rejoined
+                            and time.monotonic() - t0 > rejoin_failed_after):
+                        rejoined.add(wid)
+                        i = int(wid[2:])
+                        nw = self._make_worker(i, wid + "r")
+                        nw.fail_at_wave = None
+                        self.workers[wid + "r"] = nw
+                        nw.start()
+            # periodic checkpoint (PS + clocks)
+            if self.ckpt_dir and self.ckpt_every:
+                gc = self.ps.clock.global_clock()
+                if gc >= ckpt_step + self.ckpt_every:
+                    ckpt_step = gc
+                    save_checkpoint(
+                        self.ckpt_dir, gc,
+                        {"params": self.ps.pull()},
+                        {"clocks": dict(self.ps.clock.state.clocks),
+                         "push_count": self.ps.push_count})
+        report = TrainReport()
+        for wid, w in self.workers.items():
+            for t, l in zip(w.metrics.wall_clock, w.metrics.losses):
+                report.losses.append((t, wid, l))
+            report.waves += w.metrics.waves
+        report.wall_s = time.monotonic() - t0
+        report.wait_seconds = dict(self.ps.clock.wait_seconds)
+        report.bytes_pushed = self.ps.bytes_pushed
+        report.bytes_wire = self.ps.bytes_wire
+        return report
+
+
+def bsp_allreduce_baseline(init_params, wave_step, optimizer, *, num_vw: int,
+                           batch: int, seq: int, vocab: int, max_waves: int,
+                           speeds: Optional[list[float]] = None,
+                           data_seed: int = 0) -> TrainReport:
+    """Synchronous AllReduce DP (the paper's Horovod baseline): every wave,
+    all VWs' deltas are averaged... summed (each VW sees 1/N of the batch) and
+    applied to one global copy; the step rate is gated by the slowest VW."""
+    source = MarkovLM(vocab, seed=data_seed)
+    loaders = [ShardedLoader(source, batch, seq, i, num_vw, seed=17)
+               for i in range(num_vw)]
+    params = jax.tree.map(np.asarray, init_params)
+    opt_states = [optimizer.init(init_params) for _ in range(num_vw)]
+    speeds = speeds or [0.0] * num_vw
+    report = TrainReport()
+    t0 = time.monotonic()
+    for wave in range(max_waves):
+        deltas_all, losses = [], []
+        t_wave = 0.0
+        for i in range(num_vw):
+            x, y = loaders[i].next()
+            tw0 = time.monotonic()
+            deltas, opt_states[i], loss = wave_step(params, opt_states[i],
+                                                    x, y)
+            t_wave = max(t_wave, time.monotonic() - tw0 + speeds[i])
+            deltas_all.append(deltas)
+            losses.append(float(loss))
+        # emulate the straggler-gated wall clock of synchronous AllReduce
+        time.sleep(max(0.0, t_wave * 0.0))
+        mean_delta = jax.tree.map(
+            lambda *ds: np.mean(np.stack([np.asarray(d) for d in ds]), 0),
+            *deltas_all)
+        params = jax.tree.map(np.add, params, mean_delta)
+        now = t0 + (wave + 1) * t_wave if speeds else time.monotonic()
+        for i, l in enumerate(losses):
+            report.losses.append(((wave + 1) * t_wave if any(speeds)
+                                  else time.monotonic() - t0, f"vw{i}", l))
+        report.waves += num_vw
+    report.wall_s = time.monotonic() - t0
+    return report

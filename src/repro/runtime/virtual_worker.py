@@ -1,0 +1,81 @@
+"""A virtual worker: the paper's group of k GPUs running PMP, driven as a
+thread against the parameter server with WSP gating.
+
+On real hardware each VW runs the jitted pipelined wave step on its mesh
+slice; here the wave step is any callable (the single-device oracle on CPU,
+the shard_map pipeline on a fake mesh) — the WSP protocol is identical.
+Heterogeneity is simulated with per-VW speed factors / straggle schedules.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class VWMetrics:
+    losses: list = field(default_factory=list)
+    wave_times: list = field(default_factory=list)
+    wall_clock: list = field(default_factory=list)
+    waves: int = 0
+
+
+class VirtualWorker(threading.Thread):
+    def __init__(self, wid: str, ps, wave_step: Callable, loader, opt_state,
+                 *, max_waves: int, pull_every: int = 1,
+                 slowdown: float = 0.0,
+                 straggle_fn: Optional[Callable[[int], float]] = None,
+                 stop_event: Optional[threading.Event] = None,
+                 fail_at_wave: Optional[int] = None):
+        super().__init__(daemon=True, name=wid)
+        self.wid, self.ps, self.wave_step = wid, ps, wave_step
+        self.loader, self.opt_state = loader, opt_state
+        self.max_waves, self.pull_every = max_waves, pull_every
+        self.slowdown, self.straggle_fn = slowdown, straggle_fn
+        self.stop_event = stop_event or threading.Event()
+        self.fail_at_wave = fail_at_wave
+        self.metrics = VWMetrics()
+        self.failed = False
+        self.params = None
+
+    def run(self):
+        t_start = time.monotonic()
+        self.ps.register(self.wid)
+        self.params = self.ps.pull()
+        wave = self.ps.clock.local_clock(self.wid)
+        try:
+            while wave < self.max_waves and not self.stop_event.is_set():
+                if self.fail_at_wave is not None and wave == self.fail_at_wave:
+                    self.failed = True
+                    self.ps.deregister(self.wid)      # simulated node failure
+                    return
+                if not self.ps.wait_pull_allowed(self.wid, timeout=120.0):
+                    break
+                t0 = time.monotonic()
+                x, y = self.loader.next()
+                deltas, self.opt_state, loss = self.wave_step(
+                    self.params, self.opt_state, x, y)
+                loss = float(loss)
+                extra = self.slowdown
+                if self.straggle_fn is not None:
+                    extra += self.straggle_fn(wave)
+                if extra > 0:
+                    time.sleep(extra)
+                wave = self.ps.push_wave(self.wid, deltas)
+                # local weights see their own wave immediately (paper Sec. 4)
+                self.params = jax.tree.map(np.add, self.params,
+                                           jax.tree.map(np.asarray, deltas))
+                if self.pull_every and wave % self.pull_every == 0:
+                    self.params = self.ps.pull()
+                self.metrics.losses.append(loss)
+                self.metrics.wave_times.append(time.monotonic() - t0)
+                self.metrics.wall_clock.append(time.monotonic() - t_start)
+                self.metrics.waves = wave
+        except Exception:
+            self.failed = True
+            raise

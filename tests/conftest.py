@@ -1,0 +1,8 @@
+"""Make the repo root importable (benchmarks/ package) regardless of cwd."""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

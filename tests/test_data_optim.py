@@ -1,0 +1,119 @@
+"""Data pipeline determinism/resume + optimizer + compression + allocation."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allocation import Node, allocate, vw_throughputs, \
+    straggler_report
+from repro.core.partition import PAPER_GPUS
+from repro.configs import ARCHS
+from repro.data.pipeline import MarkovLM, ShardedLoader
+from repro.dist.compression import ErrorFeedbackCompressor, topk_compress, \
+    topk_decompress
+from repro.optim import make_optimizer
+
+
+def test_loader_deterministic_and_resumable():
+    src = MarkovLM(256, seed=3)
+    a = ShardedLoader(src, 4, 16, 0, 2, seed=5)
+    b = ShardedLoader(src, 4, 16, 0, 2, seed=5)
+    for _ in range(3):
+        xa, ya = a.next()
+        xb, yb = b.next()
+        np.testing.assert_array_equal(xa, xb)
+    # resume from state_dict reproduces the continuation exactly
+    sd = a.state_dict()
+    x4, _ = a.next()
+    c = ShardedLoader(src, 4, 16, 0, 2, seed=5)
+    c.load_state_dict(sd)
+    x4c, _ = c.next()
+    np.testing.assert_array_equal(x4, x4c)
+
+
+def test_loader_shards_disjoint():
+    src = MarkovLM(256, seed=3)
+    a = ShardedLoader(src, 4, 16, 0, 2, seed=5)
+    b = ShardedLoader(src, 4, 16, 1, 2, seed=5)
+    xa, _ = a.next()
+    xb, _ = b.next()
+    assert not np.array_equal(xa, xb)
+
+
+def test_markov_is_learnable_signal():
+    """An order-2 Markov stream has lower conditional entropy than uniform."""
+    src = MarkovLM(256, seed=0)
+    rng = np.random.default_rng(0)
+    x, y = src.sample(rng, 64, 128)
+    assert x.max() < src.v            # latent alphabet
+    # empirical bigram predictability beats uniform
+    from collections import Counter, defaultdict
+    ctx = defaultdict(Counter)
+    for row_x, row_y in zip(x, y):
+        for t in range(1, len(row_x)):
+            ctx[(row_x[t - 1], row_x[t])][row_y[t]] += 1
+    correct = total = 0
+    for c, cnt in ctx.items():
+        correct += cnt.most_common(1)[0][1]
+        total += sum(cnt.values())
+    assert correct / total > 2.0 / src.v
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_topk_error_feedback_conserves_mass(seed):
+    rng = np.random.default_rng(seed)
+    comp = ErrorFeedbackCompressor(0.25)
+    total_sent = np.zeros(64, np.float32)
+    total_true = np.zeros(64, np.float32)
+    for _ in range(8):
+        g = rng.normal(size=64).astype(np.float32)
+        total_true += g
+        idx, vals = comp.compress("w", g)
+        total_sent += topk_decompress(idx, vals, 64)
+    resid = comp._residual["w"]
+    np.testing.assert_allclose(total_sent + resid, total_true, atol=1e-4)
+
+
+def test_optimizers_basic():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 2.0)}
+    for name, expect in (("sgd", -0.2), ("momentum", -0.2)):
+        opt = make_optimizer(name, 0.1)
+        st_ = opt.init(params)
+        d, st_ = opt.update(grads, st_, params)
+        np.testing.assert_allclose(np.asarray(d["w"]), expect, rtol=1e-6)
+    opt = make_optimizer("adamw", 0.1, weight_decay=0.0)
+    st_ = opt.init(params)
+    d, st_ = opt.update(grads, st_, params)
+    np.testing.assert_allclose(np.asarray(d["w"]), -0.1, rtol=1e-4)
+
+
+def test_allocation_policies_paper_table3():
+    """NP/ED/HD reproduce the shape of the paper's Table 3 and the straggler
+    ranking: ED/HD balance VW throughput; NP is straggler-bound."""
+    nodes = [Node(PAPER_GPUS[c], 4) for c in "VRGQ"]
+    cfg = ARCHS["h2o-danube-1.8b"]
+    rep, ths = {}, {}
+    for pol in ("NP", "ED", "HD"):
+        vws = allocate(nodes, pol)
+        assert len(vws) == 4 and all(len(v) == 4 for v in vws)
+        th = vw_throughputs(cfg, vws, 4096, 4 * 4096, nm=4)
+        rep[pol], ths[pol] = straggler_report(th), th
+    # NP: whimpy-GPU VWs cannot even fit the model (the paper's "ResNet-152
+    # too big to be loaded in four whimpy GPUs" phenomenon)
+    assert (ths["NP"] == 0).sum() >= 1
+    # ED: identical VWs, perfectly balanced; HD: all feasible, near-balanced
+    assert rep["ED"]["imbalance"] < 1.01
+    assert (ths["HD"] > 0).all() and rep["HD"]["imbalance"] < 1.15
+    # WSP rate (sum) dominates BSP rate (N x min) under heterogeneity
+    assert rep["NP"]["wsp_rate"] > rep["NP"]["bsp_rate"]
+    assert rep["HD"]["wsp_rate"] >= rep["HD"]["bsp_rate"]
+
+
+def test_allocation_ed_same_multiset():
+    nodes = [Node(PAPER_GPUS[c], 4) for c in "VRGQ"]
+    vws = allocate(nodes, "ED")
+    names = [tuple(sorted(g.name for g in vw)) for vw in vws]
+    assert len(set(names)) == 1                  # identical VW composition

@@ -1,0 +1,107 @@
+"""Partitioner: DP exactness vs brute force, memory feasibility, heterogeneity."""
+import itertools
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.partition import (DeviceProfile, PAPER_GPUS, layer_costs,
+                                  partition_minmax, inflight,
+                                  max_concurrent_minibatches)
+
+
+def brute_force(flops, act, par, devices, nm):
+    L, k = len(flops), len(devices)
+    best, best_bounds = np.inf, None
+    pre_f = np.concatenate([[0.0], np.cumsum(flops)])
+    pre_p = np.concatenate([[0.0], np.cumsum(par)])
+
+    def stage_time(a, b, s):
+        d = devices[s]
+        t = (pre_f[b] - pre_f[a]) / d.eff_flops
+        if b < L:
+            t += act[b - 1] / (d.link_gbps * 1e9)
+        return t
+
+    def stage_mem(a, b, s):
+        return (pre_p[b] - pre_p[a]) * 4.0 + float(np.sum(act[a:b])) * \
+            inflight(s, k, nm)
+
+    for cuts in itertools.combinations(range(1, L), k - 1):
+        bounds = [0, *cuts, L]
+        ok = all(stage_mem(bounds[i], bounds[i + 1], i)
+                 <= devices[i].mem_gb * 1e9 for i in range(k))
+        if not ok:
+            continue
+        t = max(stage_time(bounds[i], bounds[i + 1], i) for i in range(k))
+        if t < best:
+            best, best_bounds = t, bounds
+    return best, best_bounds
+
+
+@given(
+    L=st.integers(4, 9),
+    k=st.integers(2, 4),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_dp_matches_brute_force(L, k, seed):
+    if k > L:
+        return
+    rng = np.random.default_rng(seed)
+    flops = rng.uniform(1e9, 1e12, L)
+    act = rng.uniform(1e5, 1e7, L)
+    par = rng.uniform(1e6, 1e8, L)
+    devices = [DeviceProfile(f"d{i}", rng.uniform(5, 200), rng.uniform(4, 24))
+               for i in range(k)]
+    bf_t, bf_bounds = brute_force(flops, act, par, devices, nm=2)
+    bounds, times, ok = partition_minmax(flops, act, par, devices, nm=2)
+    if bf_bounds is None:
+        assert not ok
+    else:
+        assert ok
+        assert np.isclose(max(times), bf_t, rtol=1e-9)
+
+
+def test_memory_constraints_respected():
+    cfg = ARCHS["qwen3-0.6b"]
+    fl, pb, ab = layer_costs(cfg, 4096, 4 * 4096)
+    devs = [PAPER_GPUS[c] for c in "VRGQ"]
+    bounds, _, ok = partition_minmax(fl, ab, pb, devs, nm=4)
+    assert ok
+    k = len(devs)
+    for s in range(k):
+        a, b = bounds[s], bounds[s + 1]
+        mem = np.sum(pb[a:b]) * 4.0 + np.sum(ab[a:b]) * inflight(s, k, 4)
+        assert mem <= devs[s].mem_gb * 1e9
+
+
+def test_hetero_gives_fast_devices_more_layers():
+    """A much faster device must not get fewer layers than a slow one when
+    communication is negligible."""
+    L = 16
+    flops = np.full(L, 1e12)
+    act = np.full(L, 1.0)          # negligible comm
+    par = np.full(L, 1e6)
+    fast = DeviceProfile("fast", 100.0, 64.0)
+    slow = DeviceProfile("slow", 10.0, 64.0)
+    bounds, times, ok = partition_minmax(flops, act, par, [fast, slow], nm=2)
+    assert ok
+    n_fast = bounds[1] - bounds[0]
+    n_slow = bounds[2] - bounds[1]
+    assert n_fast > n_slow
+
+
+def test_position_dependent_memory_model():
+    """Stage 0 must hold more in-flight activations than the last stage
+    (paper Section 4, Figure 1)."""
+    assert inflight(0, 4, 8) > inflight(3, 4, 8)
+    assert inflight(3, 4, 8) == 1
+
+
+def test_max_m_shrinks_with_memory():
+    cfg = ARCHS["qwen3-0.6b"]
+    big = [DeviceProfile("big", 100, 24.0)] * 4
+    tiny = [DeviceProfile("tiny", 100, 0.05)] * 4
+    assert max_concurrent_minibatches(cfg, big, 4096, 4 * 4096, nm_cap=8) \
+        >= max_concurrent_minibatches(cfg, tiny, 4096, 4 * 4096, nm_cap=8)

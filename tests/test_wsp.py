@@ -1,0 +1,112 @@
+"""Property tests for the WSP clock machine (paper Section 5)."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wsp import WSPClockState, WSPClockServer, StalenessViolation
+
+
+@given(
+    n=st.integers(2, 6),
+    D=st.integers(0, 4),
+    schedule=st.lists(st.integers(0, 5), min_size=1, max_size=200),
+)
+@settings(max_examples=200, deadline=None)
+def test_staleness_bound_never_violated(n, D, schedule):
+    """Under any admissible schedule, the clock distance stays <= D + 1 and
+    the gating rule matches the paper: a VW at clock c may proceed iff
+    c - D <= c_global."""
+    s = WSPClockState(D)
+    for i in range(n):
+        s.add_worker(f"w{i}")
+    for pick in schedule:
+        wid = f"w{pick % n}"
+        if s.can_proceed(wid):
+            s.complete_wave(wid)
+            # invariant: max distance bounded by D + 1 (a worker may finish
+            # the wave it was allowed to start)
+            assert s.max_distance() <= D + 1
+        else:
+            # blocked worker is exactly D + ... ahead of global
+            assert s.clocks[wid] - s.global_clock() > D
+            with pytest.raises(StalenessViolation):
+                s.complete_wave(wid)
+            s.clocks[wid] -= 1  # undo the raise's increment guard
+            s.clocks[wid] += 1
+
+
+@given(n=st.integers(2, 5), D=st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_fastest_worker_gets_blocked(n, D):
+    """A worker running alone can complete exactly D+1 waves, then blocks."""
+    s = WSPClockState(D)
+    for i in range(n):
+        s.add_worker(f"w{i}")
+    done = 0
+    while s.can_proceed("w0") and done < D + 5:
+        s.complete_wave("w0")
+        done += 1
+    assert done == D + 1
+
+
+@given(n=st.integers(2, 5), D=st.integers(0, 3),
+       leave=st.integers(0, 4))
+@settings(max_examples=50, deadline=None)
+def test_elastic_remove_unblocks(n, D, leave):
+    """Removing the slowest VW advances the global clock (fault tolerance:
+    a dead worker does not wedge the fleet)."""
+    s = WSPClockState(D)
+    for i in range(n):
+        s.add_worker(f"w{i}")
+    for _ in range(D + 1):
+        s.complete_wave("w0")
+    assert not s.can_proceed("w0")
+    # all but w0 are at clock 0; removing them unblocks w0
+    for i in range(1, n):
+        s.remove_worker(f"w{i}")
+    assert s.can_proceed("w0")
+
+
+def test_rejoin_starts_at_global_clock():
+    s = WSPClockState(1)
+    s.add_worker("a")
+    s.add_worker("b")
+    for _ in range(2):
+        s.complete_wave("a")
+        s.complete_wave("b")
+    s.remove_worker("b")
+    s.complete_wave("a")
+    s.add_worker("b2")           # elastic re-join
+    assert s.clocks["b2"] == s.global_clock()
+    assert s.can_proceed("b2")
+
+
+def test_blocking_server_threads():
+    """Two threads, D=0: they must alternate in lock step (BSP-like)."""
+    srv = WSPClockServer(D=0)
+    srv.register("a")
+    srv.register("b")
+    log = []
+    lock = threading.Lock()
+
+    def worker(wid, waves):
+        for _ in range(waves):
+            assert srv.wait_until_allowed(wid, timeout=10)
+            with lock:
+                log.append(wid)
+            srv.complete_wave(wid)
+
+    ts = [threading.Thread(target=worker, args=("a", 5)),
+          threading.Thread(target=worker, args=("b", 5))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(30)
+    assert len(log) == 10
+    # with D=0 neither worker can be 2 waves ahead at any prefix
+    ca = cb = 0
+    for wid in log:
+        ca += wid == "a"
+        cb += wid == "b"
+        assert abs(ca - cb) <= 1
