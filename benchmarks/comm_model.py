@@ -1,0 +1,60 @@
+"""Communication model sweep over the repro.dist layer.
+
+For each topology x message size, price a flat ring all-reduce against the
+hierarchical pod-local-then-cross-pod reduce, and show the wire savings of
+the gradient codecs — the analytic companion to roofline.py's collective
+hint and the WSP-vs-BSP network experiments.
+
+  PYTHONPATH=src python benchmarks/comm_model.py
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.dist.compression import (ErrorFeedbackCompressor,
+                                    Int8StochasticQuantizer)
+from repro.dist.topology import make_topology
+
+SIZES_MB = (1, 16, 256, 1024)
+TOPOS = ("single", "2node", "4node", "4node:ib", "hetero-2node", "paper")
+NUM_VW = 8
+
+
+def collective_table():
+    print(f"{'topology':14s} {'msg':>7s} {'ring s':>10s} {'hier s':>10s} "
+          f"{'hier/ring':>9s}")
+    for spec in TOPOS:
+        topo = make_topology(spec, NUM_VW)
+        ws = topo.worker_names()
+        for mb in SIZES_MB:
+            nbytes = mb * 1e6
+            ring = topo.ring_allreduce_cost(ws, nbytes)
+            hier = topo.hierarchical_allreduce_cost(ws, nbytes)
+            ratio = hier / ring if ring else float("nan")
+            print(f"{spec:14s} {mb:5d}MB {ring:10.4f} {hier:10.4f} "
+                  f"{ratio:9.2f}")
+        print()
+
+
+def codec_table():
+    print(f"{'codec':14s} {'dense':>9s} {'wire':>9s} {'ratio':>6s}")
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=1_000_000).astype(np.float32)
+    for name, codec in (("topk:0.01", ErrorFeedbackCompressor(0.01)),
+                        ("topk:0.1", ErrorFeedbackCompressor(0.1)),
+                        ("int8", Int8StochasticQuantizer())):
+        idx, vals = codec.compress("bench", g)
+        wire = codec.wire_bytes(idx, vals)
+        print(f"{name:14s} {g.nbytes/1e6:7.1f}MB {wire/1e6:7.1f}MB "
+              f"{wire/g.nbytes:6.3f}")
+
+
+def main():
+    print("== collective cost model (alpha-beta, slowest-hop ring) ==")
+    collective_table()
+    print("== gradient codec wire bytes (1M float32 params) ==")
+    codec_table()
+
+
+if __name__ == "__main__":
+    main()

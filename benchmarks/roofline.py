@@ -85,8 +85,9 @@ def roofline_row(rec: dict) -> dict | None:
                    "remat recompute, padded slots)",
         "memory": "fuse/shrink activation traffic (larger microbatches, "
                   "kernel fusion, bf16 residuals)",
-        "collective": "reduce sync bytes (wave-level sync already /Nm; next: "
-                      "hierarchical pod-local reduce, grad compression, "
+        "collective": "reduce sync bytes (wave-level sync already /Nm; "
+                      "repro.dist has hierarchical pod-local reduce + grad "
+                      "compression — see benchmarks/comm_model.py; next: "
                       "overlap ppermute with compute)",
     }
     terms_k = {"compute": t_comp_kern, "memory": t_mem_kern,

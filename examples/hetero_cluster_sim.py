@@ -13,8 +13,9 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.core.allocation import Node, allocate, vw_throughputs, \
-    straggler_report
+    straggler_report, straggler_report_comm
 from repro.core.partition import PAPER_GPUS
+from repro.dist.topology import ClusterTopology
 from repro.core.wave import build_local_wave_step
 from repro.models import lm
 from repro.optim import make_optimizer
@@ -34,6 +35,15 @@ for pol in ("NP", "ED", "HD"):
     print(f"  {pol}: vws={names} imbalance={rep['imbalance']:.2f} "
           f"bsp={rep['bsp_rate']:.0f} wsp={rep['wsp_rate']:.0f} img/s")
 
+print("\n== comm-aware straggling (10G Ethernet to the PS, Section 7) ==")
+topo = ClusterTopology.from_fleet(NODES, num_vw=4)
+th_hd = policy_speed["HD"]
+rep_c = straggler_report_comm(th_hd, topo,
+                              bytes_per_wave=MODEL.param_count() * 4 * 0.01)
+print(f"  HD: compute-only imbalance={rep_c['compute_only']['imbalance']:.2f}"
+      f" -> with network {rep_c['imbalance']:.2f} "
+      f"(per-VW push s: {[round(c, 3) for c in rep_c['comm_seconds']]})")
+
 print("\n== real WSP training with NP-induced straggling (Figs. 5/6) ==")
 cfg = reduced(MODEL, num_layers=2, d_model=32, d_ff=64, vocab_size=256,
               num_heads=2, num_kv_heads=2, head_dim=16, num_microbatches=2,
@@ -41,9 +51,11 @@ cfg = reduced(MODEL, num_layers=2, d_model=32, d_ff=64, vocab_size=256,
 params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
 opt = make_optimizer("sgd", 0.3)
 step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
-# per-VW slowdowns proportional to the NP allocation's speed imbalance
+# per-VW slowdowns proportional to the NP allocation's speed imbalance;
+# infeasible VWs (zero throughput — the model does not fit) get a fixed
+# large straggle instead of an infinite one
 th = policy_speed["NP"]
-slow = [0.1 * (th.max() / t - 1.0) for t in th]
+slow = [0.1 * (th.max() / t - 1.0) if t > 0 else 0.5 for t in th]
 print(f"  per-VW extra seconds/wave: {[round(s, 3) for s in slow]}")
 
 rep_bsp = bsp_allreduce_baseline(params, step, opt, num_vw=4, batch=4,

@@ -1,0 +1,26 @@
+"""Shims over the jax API surface this repo targets.
+
+The code is written against the current jax API (jax.shard_map with
+check_vma, jax.set_mesh, jax.sharding.AxisType); older jaxlibs (0.4.x, the
+pinned CI/container version) expose the same functionality under previous
+names. Import shard_map/set_mesh from here instead of jax directly.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma, **kw)
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    # a Mesh is itself a context manager on 0.4.x
+    def set_mesh(mesh):
+        return mesh

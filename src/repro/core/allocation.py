@@ -91,3 +91,21 @@ def straggler_report(throughputs: np.ndarray) -> dict:
         "bsp_rate": float(len(t) * t.min()),
         "wsp_rate": float(t.sum()),
     }
+
+
+def straggler_report_comm(throughputs: np.ndarray, topology,
+                          bytes_per_wave: float) -> dict:
+    """Comm-aware straggler report: each VW's wave time gains the modeled
+    cost of pushing its wave delta to the parameter server over its link
+    (repro.dist.topology). A VW on a slow inter-node link can become the
+    straggler even when compute is balanced — the paper's motivation for
+    folding the profiled network into placement (Section 7)."""
+    th = np.asarray(throughputs, np.float64)
+    comm = np.array([topology.p2p_cost(f"vw{i}", "ps", bytes_per_wave)
+                     for i in range(len(th))])
+    eff = np.where(th > 0, 1.0 / (1.0 / np.where(th > 0, th, 1.0) + comm),
+                   0.0)
+    rep = straggler_report(eff)
+    rep["comm_seconds"] = [float(c) for c in comm]
+    rep["compute_only"] = straggler_report(th)
+    return rep

@@ -19,7 +19,8 @@ import jax
 import numpy as np
 
 from repro.core.wsp import WSPClockServer
-from repro.dist.compression import ErrorFeedbackCompressor
+from repro.dist.compression import ErrorFeedbackCompressor, make_codec
+from repro.dist.transport import NullTransport
 
 
 def tree_flatten_np(tree):
@@ -30,7 +31,8 @@ def tree_flatten_np(tree):
 class ParameterServer:
     def __init__(self, params_tree, *, D: int = 0, num_shards: int = 4,
                  placement: str = "default",
-                 compression_ratio: Optional[float] = None):
+                 compression_ratio: Optional[float] = None,
+                 codec=None, transport=None):
         leaves, self.treedef = tree_flatten_np(params_tree)
         self.shapes = [l.shape for l in leaves]
         self.dtypes = [l.dtype for l in leaves]
@@ -44,8 +46,17 @@ class ParameterServer:
         self.push_count = 0
         self.bytes_pushed = 0
         self.bytes_wire = 0
-        self.compressor = (ErrorFeedbackCompressor(compression_ratio)
-                           if compression_ratio else None)
+        self.comm_seconds = 0.0
+        self._stats_lock = threading.Lock()   # accounting fields above
+        # a wave-completion signal for the trainer's supervision loop
+        self.push_event = threading.Event()
+        if codec is not None:
+            self.compressor = make_codec(codec)
+        else:
+            self.compressor = (ErrorFeedbackCompressor(compression_ratio)
+                               if compression_ratio else None)
+        self.transport = transport if transport is not None \
+            else NullTransport()
 
     # -- worker lifecycle -------------------------------------------------
     def register(self, wid: str):
@@ -53,36 +64,58 @@ class ParameterServer:
 
     def deregister(self, wid: str):
         self.clock.deregister(wid)
+        self.push_event.set()        # wake the supervision loop
 
     # -- WSP protocol -----------------------------------------------------
     def push_wave(self, wid: str, deltas_tree) -> int:
-        """Apply a wave-aggregated delta; advances the worker's local clock."""
+        """Apply a wave-aggregated delta; advances the worker's local clock.
+        The wire bytes of the (possibly compressed) push transit the
+        simulated transport before the update lands."""
         leaves, _ = tree_flatten_np(deltas_tree)
+        updates, wire, dense = [], 0, 0
         for i, d in enumerate(leaves):
             flat = d.astype(np.float32).ravel()
-            self.bytes_pushed += flat.nbytes
+            dense += flat.nbytes
             if self.compressor is not None:
                 idx, vals = self.compressor.compress(f"{wid}/{i}", flat)
-                self.bytes_wire += self.compressor.wire_bytes(idx, vals)
-                with self._locks[self.shard_of_leaf[i]]:
-                    self.flat[i][idx] += vals
+                wire += self.compressor.wire_bytes(idx, vals)
+                updates.append((i, idx, vals))
             else:
-                self.bytes_wire += flat.nbytes
-                with self._locks[self.shard_of_leaf[i]]:
-                    self.flat[i] += flat
-        self.push_count += 1
-        return self.clock.complete_wave(wid)
+                wire += flat.nbytes
+                updates.append((i, None, flat))
+        sec = self.transport.send(wid, "ps", wire)
+        with self._stats_lock:
+            self.bytes_pushed += dense
+            self.bytes_wire += wire
+            self.comm_seconds += sec
+            self.push_count += 1
+        for i, idx, vals in updates:
+            with self._locks[self.shard_of_leaf[i]]:
+                if idx is None:
+                    self.flat[i] += vals
+                else:
+                    self.flat[i][idx] += vals
+        clock = self.clock.complete_wave(wid)
+        self.push_event.set()
+        return clock
 
     def wait_pull_allowed(self, wid: str, timeout: float = 120.0) -> bool:
         return self.clock.wait_until_allowed(wid, timeout)
 
-    def pull(self):
-        """Snapshot of w_global (consistent per leaf)."""
+    def pull(self, wid: Optional[str] = None):
+        """Snapshot of w_global (consistent per leaf). When the puller is
+        identified, the full parameter payload transits the transport."""
         out = []
+        nbytes = 0
         for i, f in enumerate(self.flat):
             with self._locks[self.shard_of_leaf[i]]:
                 out.append(f.copy().reshape(self.shapes[i])
                            .astype(self.dtypes[i]))
+            nbytes += f.nbytes
+        if wid is not None:
+            sec = self.transport.send("ps", wid, nbytes)
+            with self._stats_lock:
+                self.comm_seconds += sec
         return jax.tree.unflatten(self.treedef, out)
 
     # -- checkpointing ----------------------------------------------------

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig, RunConfig
 from repro.models import lm
 from repro.models.blocks import LayerCtx, apply_layer
@@ -144,10 +145,12 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
 
     buf0 = jnp.zeros((mb, S, d), x_local.dtype)
     out0 = jnp.zeros_like(x_wave)
-    aux0 = jnp.zeros((), jnp.float32)
+    # shape-(1,) carry: a rank-0 float carry becomes a scalar shard_map
+    # residual, which jax 0.4.x partial-eval mis-names ({0: axes} on rank 0)
+    aux0 = jnp.zeros((1,), jnp.float32)
     (_, out, cache_local, aux), _ = jax.lax.scan(
         tick, (buf0, out0, cache_local, aux0), jnp.arange(ticks))
-    return out.reshape(Bl, S, d), cache_local, aux
+    return out.reshape(Bl, S, d), cache_local, aux[0]
 
 
 # ----------------------------------------------------------------------------
@@ -203,7 +206,7 @@ def build_train_step(run: RunConfig, mesh: Mesh):
         # hidden broadcast GSPMD would otherwise insert for the loss.
         return _bcast_from_last(y, cfg.stages), aux / nm
 
-    pipe = jax.shard_map(
+    pipe = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs),
         out_specs=(P(dp, None, None), P()),
@@ -286,7 +289,7 @@ def build_decode_step(run: RunConfig, mesh: Mesh):
             pos=pos, tp_axis=tp_axis, merge_axis=merge_axis, seq_offset=so)
         return _bcast_from_last(y, cfg.stages), cache, aux
 
-    pipe = jax.shard_map(
+    pipe = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs,
                   P()),
@@ -323,7 +326,7 @@ def build_prefill_step(run: RunConfig, mesh: Mesh):
             pos=None, tp_axis=tp_axis, merge_axis=None)
         return _bcast_from_last(y[:, -1:], cfg.stages), cache, aux
 
-    pipe = jax.shard_map(
+    pipe = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs),
         out_specs=(P(dp, None, None), cspecs, P()),

@@ -1,0 +1,31 @@
+"""repro.dist — the communication subsystem for WSP data parallelism.
+
+HetPipe's headline saving is communication-side: virtual workers push one
+wave-aggregated delta per wave (Section 5), and the partitioner folds a
+profiled network model into stage placement (Section 7). This package models
+that layer at host level:
+
+  compression  — sparsifying / quantizing codecs with error feedback
+  topology     — heterogeneous cluster/link cost model (alpha-beta)
+  collectives  — emulated ring / hierarchical reduction algorithms
+  transport    — simulated per-link delay + byte accounting for the PS path
+
+Everything here is numpy/threading level (no device code): it is the analogue
+of the paper's profiled-network planning, usable both for analytic reports
+(allocation, benchmarks) and for injecting real waiting into the threaded
+WSP runtime.
+"""
+from repro.dist.compression import (            # noqa: F401
+    ErrorFeedbackCompressor, Int8StochasticQuantizer, make_codec,
+    topk_compress, topk_decompress,
+)
+from repro.dist.topology import (               # noqa: F401
+    ClusterTopology, LinkSpec, Pod, make_topology,
+)
+from repro.dist.collectives import (            # noqa: F401
+    ring_allreduce, ring_reduce_scatter, ring_all_gather,
+    hierarchical_allreduce,
+)
+from repro.dist.transport import (              # noqa: F401
+    NullTransport, SimulatedTransport,
+)

@@ -1,0 +1,71 @@
+"""Simulated transport: per-link delay and byte accounting for the PS path.
+
+The threaded WSP runtime models heterogeneous *compute* with per-VW speed
+factors; this transport adds the *network* side. Every ParameterServer
+push/pull routes through Transport.send(src, dst, nbytes), which
+
+  - prices the message on the topology's link (alpha + bytes/beta),
+  - sleeps for that time (scaled by time_scale so experiments stay fast),
+  - serializes concurrent messages on the same link (a per-link lock — the
+    simple contention model: a link is a shared resource, transfers queue),
+  - accounts bytes and modeled seconds per link for the training report.
+
+NullTransport is the zero-latency default: pure accounting, no waiting.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+
+
+class NullTransport:
+    """Zero-cost transport: counts bytes, never sleeps."""
+
+    def __init__(self):
+        self.bytes_by_link = defaultdict(int)
+        self.seconds_by_link = defaultdict(float)
+        self._stats_lock = threading.Lock()
+
+    def send(self, src: str, dst: str, nbytes: int) -> float:
+        with self._stats_lock:
+            self.bytes_by_link["loopback"] += int(nbytes)
+        return 0.0
+
+    def stats(self) -> dict:
+        return {"bytes_by_link": dict(self.bytes_by_link),
+                "seconds_by_link": dict(self.seconds_by_link),
+                "modeled_seconds": sum(self.seconds_by_link.values())}
+
+
+class SimulatedTransport(NullTransport):
+    def __init__(self, topology, *, time_scale: float = 1.0,
+                 max_sleep_per_msg: float = 0.25):
+        super().__init__()
+        self.topology = topology
+        self.time_scale = float(time_scale)
+        self.max_sleep_per_msg = float(max_sleep_per_msg)
+        self._link_locks: dict[str, threading.Lock] = defaultdict(
+            threading.Lock)
+        self._reg_lock = threading.Lock()
+
+    def _lock_for(self, link_name: str) -> threading.Lock:
+        with self._reg_lock:
+            return self._link_locks[link_name]
+
+    def send(self, src: str, dst: str, nbytes: int) -> float:
+        """Returns the modeled (unscaled) transfer seconds."""
+        nbytes = int(nbytes)
+        cost = self.topology.p2p_cost(src, dst, nbytes)
+        link = self.topology.link(src, dst) if cost > 0 else None
+        name = link.name if link is not None else "local"
+        with self._stats_lock:
+            self.bytes_by_link[name] += nbytes
+            self.seconds_by_link[name] += cost
+        if cost > 0:
+            delay = min(cost * self.time_scale, self.max_sleep_per_msg)
+            # holding the link lock while sleeping serializes transfers that
+            # share the link — concurrent pushers contend for bandwidth
+            with self._lock_for(name):
+                time.sleep(delay)
+        return cost

@@ -15,11 +15,16 @@ from jax.sharding import Mesh
 AUTO = getattr(jax.sharding, "AxisType", None)
 
 
-def _make(shape, names):
+def make_mesh_auto(shape, names):
+    """jax.make_mesh with Auto axis types when this jax version has them
+    (axis_types landed after 0.4.x; older versions are Auto-only anyway)."""
     kw = {}
     if AUTO is not None:
         kw["axis_types"] = (AUTO.Auto,) * len(names)
     return jax.make_mesh(shape, names, **kw)
+
+
+_make = make_mesh_auto
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

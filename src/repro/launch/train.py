@@ -39,6 +39,13 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compression", type=float, default=None)
+    ap.add_argument("--codec", default=None,
+                    help="gradient codec: topk:<ratio> | int8 | none")
+    ap.add_argument("--topology", default=None,
+                    help="network model: single | <k>node[:ib] | "
+                         "hetero-2node | paper (default: zero-latency)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="scale modeled network delays before sleeping")
     ap.add_argument("--speeds", default=None,
                     help="comma-separated per-VW slowdowns (s/wave)")
     ap.add_argument("--devices", type=int, default=0,
@@ -91,6 +98,8 @@ def main():
                         batch=a.batch, seq=a.seq, vocab=cfg.vocab_size,
                         max_waves=a.waves, speeds=speeds,
                         compression_ratio=a.compression,
+                        codec=a.codec, topology=a.topology,
+                        time_scale=a.time_scale,
                         ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every)
         rep = tr.run()
         xs, ys = rep.loss_curve()
@@ -98,13 +107,20 @@ def main():
               f"first_loss={ys[0]:.4f} last_loss={np.mean(ys[-5:]):.4f}")
         print(f"pushed={rep.bytes_pushed/1e6:.1f}MB wire="
               f"{rep.bytes_wire/1e6:.1f}MB waits={ {k: round(v,2) for k, v in rep.wait_seconds.items()} }")
+        if tr.topology is not None:
+            by_link = rep.comm.get("bytes_by_link", {})
+            print(f"network: modeled={rep.comm_seconds:.2f}s "
+                  f"bytes_by_link={ {k: f'{v/1e6:.1f}MB' for k, v in by_link.items()} }")
         return
 
     # spmd mode
+    if a.topology or a.codec or a.compression:
+        print("warning: --topology/--codec/--compression only apply to "
+              "--mode wsp; ignored in spmd mode", file=sys.stderr)
     from jax.sharding import NamedSharding, PartitionSpec as P
     dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
-    mesh = jax.make_mesh((dsz, ssz, tsz), ("data", "stage", "tp"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((dsz, ssz, tsz), ("data", "stage", "tp"))
     import dataclasses
     cfg = dataclasses.replace(cfg, stages=ssz, tp=tsz)
     params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -115,7 +131,8 @@ def main():
     from repro.data.pipeline import MarkovLM, ShardedLoader
     loader = ShardedLoader(MarkovLM(cfg.vocab_size), shape.global_batch,
                            a.seq, 0, 1)
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
         p_sh = jax.device_put(params, jax.tree.map(
             lambda s: NamedSharding(mesh, s), pspecs,
             is_leaf=lambda x: isinstance(x, P)))

@@ -17,6 +17,9 @@ import numpy as np
 
 from repro.core.param_server import ParameterServer
 from repro.data.pipeline import MarkovLM, ShardedLoader
+from repro.dist import collectives
+from repro.dist.topology import ClusterTopology, make_topology
+from repro.dist.transport import SimulatedTransport
 from repro.runtime.checkpoint import save_checkpoint, load_checkpoint
 from repro.runtime.virtual_worker import VirtualWorker
 
@@ -29,6 +32,8 @@ class TrainReport:
     wait_seconds: dict = field(default_factory=dict)
     bytes_pushed: int = 0
     bytes_wire: int = 0
+    comm_seconds: float = 0.0                       # modeled network time
+    comm: dict = field(default_factory=dict)        # transport link stats
 
     def loss_curve(self):
         pts = sorted(self.losses)
@@ -43,11 +48,20 @@ class WSPTrainer:
                  speeds: Optional[list[float]] = None,
                  straggle_fns: Optional[list] = None,
                  compression_ratio: Optional[float] = None,
+                 codec=None,
+                 topology: ClusterTopology | str | None = None,
+                 time_scale: float = 1.0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  fail_at: Optional[dict[int, int]] = None,
                  data_seed: int = 0, pull_every: int = 1):
+        if isinstance(topology, str):
+            topology = make_topology(topology, num_vw)
+        self.topology = topology
+        transport = (SimulatedTransport(topology, time_scale=time_scale)
+                     if topology is not None else None)
         self.ps = ParameterServer(init_params, D=D,
-                                  compression_ratio=compression_ratio)
+                                  compression_ratio=compression_ratio,
+                                  codec=codec, transport=transport)
         self.wave_step, self.optimizer = wave_step, optimizer
         self.num_vw, self.max_waves = num_vw, max_waves
         self.batch, self.seq = batch, seq
@@ -81,8 +95,16 @@ class WSPTrainer:
             self.workers[wid].start()
         ckpt_step = 0
         rejoined = set()
-        while any(w.is_alive() for w in self.workers.values()):
-            time.sleep(0.05)
+        periodic = bool(self.ckpt_dir and self.ckpt_every) \
+            or rejoin_failed_after is not None
+        if not periodic:
+            # nothing to supervise: block on the (fixed) worker set directly
+            for w in list(self.workers.values()):
+                w.join()
+        while periodic and any(w.is_alive() for w in self.workers.values()):
+            # wake on wave completion / worker exit rather than busy-polling
+            self.ps.push_event.wait(timeout=0.25)
+            self.ps.push_event.clear()
             # elastic re-join of failed workers
             if rejoin_failed_after is not None:
                 for wid, w in list(self.workers.items()):
@@ -90,6 +112,11 @@ class WSPTrainer:
                             and time.monotonic() - t0 > rejoin_failed_after):
                         rejoined.add(wid)
                         i = int(wid[2:])
+                        if (self.topology is not None
+                                and f"vw{i}" in self.topology.pod_of):
+                            # the re-joined worker lives on the failed one's
+                            # node as far as the network model is concerned
+                            self.topology.add_alias(wid + "r", f"vw{i}")
                         nw = self._make_worker(i, wid + "r")
                         nw.fail_at_wave = None
                         self.workers[wid + "r"] = nw
@@ -113,16 +140,28 @@ class WSPTrainer:
         report.wait_seconds = dict(self.ps.clock.wait_seconds)
         report.bytes_pushed = self.ps.bytes_pushed
         report.bytes_wire = self.ps.bytes_wire
+        report.comm_seconds = self.ps.comm_seconds
+        report.comm = self.ps.transport.stats()
         return report
 
 
 def bsp_allreduce_baseline(init_params, wave_step, optimizer, *, num_vw: int,
                            batch: int, seq: int, vocab: int, max_waves: int,
                            speeds: Optional[list[float]] = None,
+                           topology: ClusterTopology | str | None = None,
                            data_seed: int = 0) -> TrainReport:
     """Synchronous AllReduce DP (the paper's Horovod baseline): every wave,
-    all VWs' deltas are averaged... summed (each VW sees 1/N of the batch) and
-    applied to one global copy; the step rate is gated by the slowest VW."""
+    all VWs' deltas are reduced via an emulated ring all-reduce (averaged —
+    each VW sees 1/N of the batch) and applied to one global copy.
+
+    Wall clock is a *simulated* straggler-gated time: the VW steps actually
+    run sequentially on this host, so each wave is charged the max over VWs
+    of (measured compute + simulated slowdown) plus the topology-predicted
+    all-reduce time, and all of a wave's losses share that one timestamp.
+    """
+    if isinstance(topology, str):
+        topology = make_topology(topology, num_vw)
+    names = [f"vw{i}" for i in range(num_vw)]
     source = MarkovLM(vocab, seed=data_seed)
     loaders = [ShardedLoader(source, batch, seq, i, num_vw, seed=17)
                for i in range(num_vw)]
@@ -130,7 +169,7 @@ def bsp_allreduce_baseline(init_params, wave_step, optimizer, *, num_vw: int,
     opt_states = [optimizer.init(init_params) for _ in range(num_vw)]
     speeds = speeds or [0.0] * num_vw
     report = TrainReport()
-    t0 = time.monotonic()
+    sim_t = 0.0
     for wave in range(max_waves):
         deltas_all, losses = [], []
         t_wave = 0.0
@@ -142,16 +181,19 @@ def bsp_allreduce_baseline(init_params, wave_step, optimizer, *, num_vw: int,
             t_wave = max(t_wave, time.monotonic() - tw0 + speeds[i])
             deltas_all.append(deltas)
             losses.append(float(loss))
-        # emulate the straggler-gated wall clock of synchronous AllReduce
-        time.sleep(max(0.0, t_wave * 0.0))
-        mean_delta = jax.tree.map(
-            lambda *ds: np.mean(np.stack([np.asarray(d) for d in ds]), 0),
-            *deltas_all)
+        mean_delta, coll_s = collectives.ring_allreduce(
+            deltas_all, topology=topology, workers=names, average=True)
         params = jax.tree.map(np.add, params, mean_delta)
-        now = t0 + (wave + 1) * t_wave if speeds else time.monotonic()
+        nbytes = sum(np.asarray(l).nbytes
+                     for l in jax.tree.leaves(mean_delta))
+        report.bytes_pushed += nbytes * num_vw
+        # ring wire traffic: each VW moves 2(N-1)/N of the vector per wave
+        report.bytes_wire += int(2 * (num_vw - 1) * nbytes) \
+            if num_vw > 1 else 0
+        report.comm_seconds += coll_s
+        sim_t += t_wave + coll_s
         for i, l in enumerate(losses):
-            report.losses.append(((wave + 1) * t_wave if any(speeds)
-                                  else time.monotonic() - t0, f"vw{i}", l))
+            report.losses.append((sim_t, f"vw{i}", l))
         report.waves += num_vw
-    report.wall_s = time.monotonic() - t0
+    report.wall_s = sim_t
     return report

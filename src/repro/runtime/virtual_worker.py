@@ -46,7 +46,7 @@ class VirtualWorker(threading.Thread):
     def run(self):
         t_start = time.monotonic()
         self.ps.register(self.wid)
-        self.params = self.ps.pull()
+        self.params = self.ps.pull(self.wid)
         wave = self.ps.clock.local_clock(self.wid)
         try:
             while wave < self.max_waves and not self.stop_event.is_set():
@@ -71,7 +71,7 @@ class VirtualWorker(threading.Thread):
                 self.params = jax.tree.map(np.add, self.params,
                                            jax.tree.map(np.asarray, deltas))
                 if self.pull_every and wave % self.pull_every == 0:
-                    self.params = self.ps.pull()
+                    self.params = self.ps.pull(self.wid)
                 self.metrics.losses.append(loss)
                 self.metrics.wave_times.append(time.monotonic() - t0)
                 self.metrics.wall_clock.append(time.monotonic() - t_start)

@@ -13,6 +13,7 @@ import jax.numpy as jnp                      # noqa: E402
 import numpy as np                           # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh                # noqa: E402
 from repro.configs import ARCHS, reduced, RunConfig, ShapeConfig  # noqa: E402
 from repro.core import wave                  # noqa: E402
 from repro.models import lm                  # noqa: E402
@@ -20,8 +21,8 @@ from repro.optim import make_optimizer       # noqa: E402
 
 
 def main(arch_name: str, mode: str = "train") -> int:
-    mesh = jax.make_mesh((2, 2, 2), ("data", "stage", "tp"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh_auto
+    mesh = make_mesh_auto((2, 2, 2), ("data", "stage", "tp"))
     key = jax.random.PRNGKey(0)
     over = {"capacity_factor": 8.0} if ARCHS[arch_name].num_experts else {}
     cfg = reduced(ARCHS[arch_name], stages=2, tp=2, num_layers=4,
@@ -42,7 +43,7 @@ def main(arch_name: str, mode: str = "train") -> int:
                                     dtype=jnp.int32)
         step, _ = wave.build_train_step(run, mesh)
         opt = make_optimizer("sgd", 0.1)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p_sh = jax.device_put(params, jax.tree.map(
                 lambda s: NamedSharding(mesh, s), pspecs,
                 is_leaf=lambda x: isinstance(x, P)))
@@ -77,7 +78,7 @@ def main(arch_name: str, mode: str = "train") -> int:
         cache=jax.tree.map(lambda a: a.copy(), cache), pos=jnp.int32(PRE))
     ref_logits = lm.logits_ref(cfg, params, hd_ref)
     step, pspecs2, cspecs = wave.build_decode_step(run, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         p_sh = jax.device_put(params, jax.tree.map(
             lambda s: NamedSharding(mesh, s), pspecs,
             is_leaf=lambda x: isinstance(x, P)))

@@ -1,6 +1,6 @@
 """Data pipeline determinism/resume + optimizer + compression + allocation."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -60,8 +60,10 @@ def test_markov_is_learnable_signal():
     assert correct / total > 2.0 / src.v
 
 
-@given(st.integers(0, 1000))
-@settings(max_examples=30, deadline=None)
+# seeded stand-in for the original hypothesis property test: 30 random draws
+@pytest.mark.parametrize("seed", [int(s) for s in
+                                  np.random.default_rng(42).integers(0, 1000,
+                                                                     30)])
 def test_topk_error_feedback_conserves_mass(seed):
     rng = np.random.default_rng(seed)
     comp = ErrorFeedbackCompressor(0.25)

@@ -1,0 +1,280 @@
+"""repro.dist: codecs, topology cost model, collective emulation, and the
+simulated transport wired through the parameter server / trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.allocation import Node, straggler_report_comm
+from repro.core.param_server import ParameterServer
+from repro.core.partition import PAPER_GPUS
+from repro.core.wave import build_local_wave_step
+from repro.dist import collectives
+from repro.dist.compression import (ErrorFeedbackCompressor,
+                                    Int8StochasticQuantizer, make_codec,
+                                    topk_compress, topk_decompress)
+from repro.dist.topology import (ClusterTopology, LinkSpec, Pod, ETH_10G,
+                                 IB_100G, NVLINK, PCIE, make_topology)
+from repro.dist.transport import NullTransport, SimulatedTransport
+from repro.models import lm
+from repro.optim import make_optimizer
+from repro.runtime.trainer import WSPTrainer, bsp_allreduce_baseline
+
+
+def _trees(n, seed=0, shapes=((3, 4), (7,), ())):
+    rng = np.random.default_rng(seed)
+    return [{f"p{j}": rng.normal(size=s).astype(np.float32)
+             for j, s in enumerate(shapes)} for _ in range(n)]
+
+
+def _np_sum(trees):
+    return jax.tree.map(
+        lambda *xs: np.sum(np.stack([np.asarray(x) for x in xs]), 0), *trees)
+
+
+# -- collectives ----------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5])
+def test_ring_allreduce_matches_numpy(n):
+    trees = _trees(n)
+    out, cost = collectives.ring_allreduce(trees)
+    ref = _np_sum(trees)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+    assert cost == 0.0                       # untimed without a topology
+
+
+def test_ring_allreduce_average():
+    trees = _trees(4, seed=1)
+    out, _ = collectives.ring_allreduce(trees, average=True)
+    ref = jax.tree.map(lambda x: x / 4.0, _np_sum(trees))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_reduce_scatter_all_gather_roundtrip():
+    vecs = [np.random.default_rng(s).normal(size=64).astype(np.float32)
+            for s in range(4)]
+    chunks = collectives.ring_reduce_scatter(vecs)
+    full = collectives.ring_all_gather(chunks)
+    np.testing.assert_allclose(full, np.sum(vecs, 0), atol=1e-5)
+
+
+def test_hierarchical_matches_ring_and_is_cheaper_cross_pod():
+    topo = make_topology("2node", 8)
+    trees = _trees(8, seed=2)
+    ring, c_ring = collectives.ring_allreduce(trees, topology=topo)
+    hier, c_hier = collectives.hierarchical_allreduce(trees, topology=topo)
+    for a, b in zip(jax.tree.leaves(ring), jax.tree.leaves(hier)):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+    # the full vector crosses the slow tier 2(P-1)/P times instead of
+    # 2(W-1)/W: hierarchical must win on a 2-pod Ethernet cluster
+    assert 0 < c_hier < c_ring
+
+
+# -- compression ----------------------------------------------------------
+
+def test_topk_roundtrip_and_wire_bytes():
+    g = np.arange(-8, 8, dtype=np.float32)
+    idx, vals = topk_compress(g, 0.25)
+    assert idx.size == 4
+    dense = topk_decompress(idx, vals, g.size)
+    assert set(np.flatnonzero(dense)) == set(idx.tolist())
+    comp = ErrorFeedbackCompressor(0.25)
+    assert comp.wire_bytes(idx, vals) == 4 * (4 + 4)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_error_feedback_mass_conservation(seed):
+    rng = np.random.default_rng(seed)
+    comp = ErrorFeedbackCompressor(0.1)
+    sent = np.zeros(128, np.float32)
+    true = np.zeros(128, np.float32)
+    for _ in range(12):
+        g = rng.normal(size=128).astype(np.float32)
+        true += g
+        idx, vals = comp.compress("k", g)
+        sent += topk_decompress(idx, vals, 128)
+    np.testing.assert_allclose(sent + comp._residual["k"], true, atol=1e-4)
+
+
+def test_int8_stochastic_rounding_unbiased():
+    q8 = Int8StochasticQuantizer(seed=0)
+    x = np.full(20_000, 0.3337, np.float32)
+    qv, scale = q8.quantize(x)
+    # E[q * scale] == x: the mean over many stochastic roundings recovers x
+    assert abs(float(np.mean(q8.dequantize(qv, scale))) - 0.3337) < 1e-3
+    # per-entry error bounded by one quantization step
+    assert float(np.max(np.abs(q8.dequantize(qv, scale) - x))) <= scale + 1e-6
+    idx, vals = q8.compress("k", x)
+    assert q8.wire_bytes(idx, vals) == x.size + 4     # 1 B/entry + scale
+
+
+def test_make_codec_specs():
+    assert make_codec(None) is None
+    assert make_codec("none") is None
+    assert isinstance(make_codec("topk:0.5"), ErrorFeedbackCompressor)
+    assert isinstance(make_codec(0.5), ErrorFeedbackCompressor)
+    assert isinstance(make_codec("int8"), Int8StochasticQuantizer)
+    with pytest.raises(ValueError):
+        make_codec("gzip")
+
+
+# -- topology -------------------------------------------------------------
+
+def test_topology_cost_monotonicity():
+    topo = make_topology("2node", 4)
+    # more bytes => strictly higher cost
+    assert topo.p2p_cost("vw0", "vw2", 2e6) > topo.p2p_cost("vw0", "vw2", 1e6)
+    # intra-pod (NVLink) beats inter-pod (Ethernet)
+    assert topo.p2p_cost("vw0", "vw1", 1e6) < topo.p2p_cost("vw0", "vw2", 1e6)
+    # slower link class => higher cost at equal bytes
+    fast = LinkSpec("fast", 100.0, 1e-6)
+    slow = LinkSpec("slow", 1.0, 1e-6)
+    assert slow.transfer_time(1e6) > fast.transfer_time(1e6)
+    # IB inter-node beats 10G Ethernet
+    eth = make_topology("2node", 4)
+    ib = make_topology("2node:ib", 4)
+    assert ib.p2p_cost("vw0", "vw3", 1e7) < eth.p2p_cost("vw0", "vw3", 1e7)
+
+
+def test_topology_ps_placement_and_collective_costs():
+    topo = make_topology("2node", 4)
+    assert topo.p2p_cost("vw0", "ps", 1e6) == 0.0      # PS hosted on vw0
+    assert topo.p2p_cost("vw3", "ps", 1e6) > 0.0       # cross-pod push
+    ws = topo.worker_names()
+    assert ws == ["vw0", "vw1", "vw2", "vw3"]
+    assert topo.ring_allreduce_cost(ws, 1e7) > \
+        topo.reduce_scatter_cost(ws, 1e7)
+    # a one-worker "collective" is free
+    assert topo.ring_allreduce_cost(["vw0"], 1e7) == 0.0
+
+
+def test_topology_from_fleet_and_presets():
+    nodes = [Node(PAPER_GPUS[c], 4) for c in "VRGQ"]
+    topo = ClusterTopology.from_fleet(nodes, num_vw=4)
+    assert sorted(topo.worker_names()) == [f"vw{i}" for i in range(4)]
+    # each VW sits on its own node: every pair crosses Ethernet
+    assert topo.link("vw0", "vw1") is topo.inter
+    assert make_topology("paper", 4).p2p_cost("vw1", "ps", 1e6) > 0
+    assert make_topology(None, 4) is None
+    assert make_topology("none", 4) is None
+    hetero = make_topology("hetero-2node", 4)
+    assert hetero.link("vw0", "vw1").name == NVLINK.name
+    assert hetero.link("vw2", "vw3").name == PCIE.name
+
+
+def test_comm_aware_straggler_report():
+    topo = make_topology("2node", 4)
+    th = np.array([10.0, 10.0, 10.0, 10.0])
+    rep = straggler_report_comm(th, topo, bytes_per_wave=50e6)
+    # balanced compute, but vw2/vw3 push over Ethernet: comm makes stragglers
+    assert rep["compute_only"]["imbalance"] == pytest.approx(1.0)
+    assert rep["imbalance"] > 1.0
+    assert rep["comm_seconds"][0] == 0.0 and rep["comm_seconds"][3] > 0.0
+    assert rep["wsp_rate"] < rep["compute_only"]["wsp_rate"]
+
+
+# -- transport + parameter server ----------------------------------------
+
+def _params():
+    return {"a": np.ones((8, 8), np.float32), "b": np.zeros(16, np.float32)}
+
+
+def test_ps_wire_byte_accounting():
+    deltas = {"a": np.ones((8, 8), np.float32),
+              "b": np.ones(16, np.float32)}
+    dense = 64 * 4 + 16 * 4
+    ps = ParameterServer(_params(), D=0)
+    ps.register("w0")
+    ps.push_wave("w0", deltas)
+    assert ps.bytes_pushed == dense and ps.bytes_wire == dense
+    psc = ParameterServer(_params(), D=0, codec="topk:0.25")
+    psc.register("w0")
+    psc.push_wave("w0", deltas)
+    assert psc.bytes_pushed == dense
+    assert 0 < psc.bytes_wire < psc.bytes_pushed
+
+
+def test_simulated_transport_accounts_and_delays():
+    topo = make_topology("2node", 2)
+    tr = SimulatedTransport(topo, time_scale=1.0)
+    cost = tr.send("vw1", "ps", int(1e6))            # crosses Ethernet
+    assert cost == pytest.approx(ETH_10G.transfer_time(1e6))
+    assert tr.bytes_by_link[ETH_10G.name] == int(1e6)
+    assert tr.stats()["modeled_seconds"] > 0
+    assert tr.send("vw0", "ps", int(1e6)) == 0.0     # PS-local push is free
+    assert NullTransport().send("a", "b", 100) == 0.0
+
+
+CFG = reduced(ARCHS["qwen3-0.6b"], num_layers=2, d_model=32, d_ff=64,
+              vocab_size=256, num_heads=2, num_kv_heads=2, head_dim=16,
+              num_microbatches=2)
+
+
+def _setup():
+    params, _ = lm.init_params(CFG, jax.random.PRNGKey(0))
+    opt = make_optimizer("sgd", 0.3)
+    step = build_local_wave_step(CFG, CFG.num_microbatches, opt)
+    return params, opt, step
+
+
+def test_trainer_topology_slows_wall_clock():
+    """A 2-node heterogeneous topology (cross-node pushes/pulls pay Ethernet
+    latency+bandwidth) must cost strictly more wall time than the
+    zero-latency default, with per-link bytes accounted."""
+    params, opt, step = _setup()
+    kw = dict(num_vw=2, D=0, batch=4, seq=32, vocab=CFG.vocab_size,
+              max_waves=3)
+    WSPTrainer(params, step, opt, **kw).run()    # warm the jit cache
+    base = WSPTrainer(params, step, opt, **kw).run()
+    assert base.comm_seconds == 0.0
+    slow_eth = LinkSpec("slow-eth", 0.05, 0.02)      # exaggerated for CI
+    topo = ClusterTopology([Pod("node0", ("vw0",), NVLINK),
+                            Pod("node1", ("vw1",), PCIE)], inter=slow_eth)
+    tr = WSPTrainer(params, step, opt, topology=topo, **kw)
+    rep = tr.run()
+    assert rep.comm_seconds > 0.0
+    assert rep.wall_s > base.wall_s
+    assert rep.comm["bytes_by_link"].get("slow-eth", 0) > 0
+    assert sum(rep.wait_seconds.values()) >= 0.0
+
+
+def test_trainer_codec_and_topology_compose():
+    params, opt, step = _setup()
+    tr = WSPTrainer(params, step, opt, num_vw=2, D=0, batch=4, seq=32,
+                    vocab=CFG.vocab_size, max_waves=3,
+                    codec="topk:0.25", topology="2node", time_scale=0.0)
+    rep = tr.run()
+    assert rep.bytes_wire < rep.bytes_pushed
+    assert rep.comm_seconds > 0.0                    # modeled even unscaled
+
+
+def test_trainer_rejoin_with_topology_aliases_endpoint():
+    """An elastically re-joined worker ('vw1r') is not a topology endpoint;
+    the trainer must alias it onto the failed worker's node instead of the
+    transport raising KeyError on its first pull."""
+    params, opt, step = _setup()
+    tr = WSPTrainer(params, step, opt, num_vw=2, D=1, batch=4, seq=32,
+                    vocab=CFG.vocab_size, max_waves=4, fail_at={1: 1},
+                    topology="2node", time_scale=0.0)
+    tr.run(rejoin_failed_after=0.05)
+    rejoined = [w for k, w in tr.workers.items() if k.endswith("r")]
+    assert rejoined
+    assert not any(w.failed for w in rejoined)
+    assert tr.topology.link("vw1r", "ps").name == \
+        tr.topology.link("vw1", "ps").name
+
+
+def test_bsp_baseline_uses_ring_and_topology():
+    params, opt, step = _setup()
+    kw = dict(num_vw=2, batch=4, seq=32, vocab=CFG.vocab_size, max_waves=3)
+    rep0 = bsp_allreduce_baseline(params, step, opt, **kw)
+    rep1 = bsp_allreduce_baseline(params, step, opt, topology="2node", **kw)
+    assert rep0.comm_seconds == 0.0
+    assert rep1.comm_seconds > 0.0
+    assert rep1.bytes_wire > 0 and rep1.bytes_pushed > rep1.bytes_wire / 2
+    # simulated straggler-gated clock: monotone loss timestamps
+    xs, _ = rep1.loss_curve()
+    assert (np.diff(xs) >= 0).all()

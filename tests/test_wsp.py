@@ -1,18 +1,21 @@
 """Property tests for the WSP clock machine (paper Section 5)."""
 import threading
 
+import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.wsp import WSPClockState, WSPClockServer, StalenessViolation
 
+# seeded stand-ins for the original hypothesis property tests
+_R = np.random.default_rng(11)
+_SCHED_CASES = [(int(_R.integers(2, 7)), int(_R.integers(0, 5)),
+                 [int(x) for x in _R.integers(0, 6, int(_R.integers(1, 201)))])
+                for _ in range(200)]
+_ND_CASES = sorted({(int(_R.integers(2, 6)), int(_R.integers(0, 4)))
+                    for _ in range(50)})
 
-@given(
-    n=st.integers(2, 6),
-    D=st.integers(0, 4),
-    schedule=st.lists(st.integers(0, 5), min_size=1, max_size=200),
-)
-@settings(max_examples=200, deadline=None)
+
+@pytest.mark.parametrize("n,D,schedule", _SCHED_CASES)
 def test_staleness_bound_never_violated(n, D, schedule):
     """Under any admissible schedule, the clock distance stays <= D + 1 and
     the gating rule matches the paper: a VW at clock c may proceed iff
@@ -36,8 +39,7 @@ def test_staleness_bound_never_violated(n, D, schedule):
             s.clocks[wid] += 1
 
 
-@given(n=st.integers(2, 5), D=st.integers(0, 3))
-@settings(max_examples=50, deadline=None)
+@pytest.mark.parametrize("n,D", _ND_CASES)
 def test_fastest_worker_gets_blocked(n, D):
     """A worker running alone can complete exactly D+1 waves, then blocks."""
     s = WSPClockState(D)
@@ -50,10 +52,8 @@ def test_fastest_worker_gets_blocked(n, D):
     assert done == D + 1
 
 
-@given(n=st.integers(2, 5), D=st.integers(0, 3),
-       leave=st.integers(0, 4))
-@settings(max_examples=50, deadline=None)
-def test_elastic_remove_unblocks(n, D, leave):
+@pytest.mark.parametrize("n,D", _ND_CASES)
+def test_elastic_remove_unblocks(n, D):
     """Removing the slowest VW advances the global clock (fault tolerance:
     a dead worker does not wedge the fleet)."""
     s = WSPClockState(D)
