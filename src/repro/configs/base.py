@@ -190,6 +190,9 @@ class RunConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     cache_dtype: str = ""           # "" -> compute_dtype; "f8" halves KV traffic
+    # software-pipelined (skewed) schedule: issue the boundary-activation
+    # ppermute of tick t concurrently with tick t+1's stage compute
+    overlap: bool = False
     seed: int = 0
     loss_chunk: int = 512           # vocab-chunked CE chunk along seq
 

@@ -65,12 +65,22 @@ def allocate(nodes: list[Node], policy: str, num_vw: int | None = None):
 
 
 def vw_throughputs(cfg, vws, seq_len: int, mb_tokens: int, nm: int,
-                   schedule: str = "1f1b"):
-    """Analytic per-VW minibatch throughput under the min-max partition."""
+                   schedule: str = "1f1b", *, inter=None,
+                   overlap: bool = False):
+    """Analytic per-VW minibatch throughput under the min-max partition.
+
+    `inter` (a repro.dist.topology.LinkSpec) prices each stage boundary with
+    real links via stage_links — consecutive same-profile devices share a
+    node, a profile change crosses `inter`. `overlap` gates each stage at
+    max(compute, comm) instead of the sum (the skewed pipeline schedule)."""
+    if inter is not None:
+        from repro.dist.topology import stage_links
     out = []
     fl, pb, ab = layer_costs(cfg, seq_len, mb_tokens)
     for vw in vws:
-        res = partition_minmax(fl, ab, pb, vw, nm)
+        links = stage_links(vw, inter) if inter is not None else None
+        res = partition_minmax(fl, ab, pb, vw, nm, links=links,
+                               overlap=overlap)
         if not res[2]:
             out.append(0.0)
             continue

@@ -6,6 +6,14 @@ produces its partition, modeled by shard affinity metadata). Virtual workers
 push *wave-aggregated deltas* ũ (one push per wave — the paper's communication
 saving) and pull w_global under the WSP clock gate.
 
+A push is split into begin_push (compress + start the transport transfer,
+without blocking) and finish_push (wait for the wire, apply shard-grouped
+updates, advance the WSP clock); push_wave() chains the two. The async
+runtime hands the raw delta to a per-worker outbox thread which runs the
+whole push_wave off the worker's critical path — compression, wire
+accounting, and the transport delay all land on the outbox thread while the
+worker computes its next wave.
+
 This is the host-level PS used by the threaded runtime (true asynchrony,
 D >= 0). The SPMD dry-run path instead reduces wave deltas with collectives
 (D = 0); both share the same WSP clock state machine.
@@ -13,6 +21,7 @@ D >= 0). The SPMD dry-run path instead reduces wave deltas with collectives
 from __future__ import annotations
 
 import threading
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -20,12 +29,21 @@ import numpy as np
 
 from repro.core.wsp import WSPClockServer
 from repro.dist.compression import ErrorFeedbackCompressor, make_codec
-from repro.dist.transport import NullTransport
+from repro.dist.transport import AsyncSend, NullTransport
 
 
 def tree_flatten_np(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return [np.asarray(l) for l in leaves], treedef
+
+
+@dataclass
+class PendingPush:
+    """A push whose wire transfer has been issued but not yet applied."""
+    wid: str
+    updates: list                      # [(leaf_idx, topk_idx | None, vals)]
+    send: AsyncSend
+    applied: bool = field(default=False)
 
 
 class ParameterServer:
@@ -42,11 +60,17 @@ class ParameterServer:
         # layer/leaf round-robin over shards (paper's default placement)
         self.shard_of_leaf = [i % num_shards for i in range(len(leaves))]
         self._locks = [threading.Lock() for _ in range(num_shards)]
+        # per-shard monotone version, bumped on every push that touches the
+        # shard; pull() reuses a cached leaf snapshot while versions match
+        self._shard_version = [0] * num_shards
+        self._leaf_cache: list = [None] * len(leaves)
         self.clock = WSPClockServer(D)
         self.push_count = 0
         self.bytes_pushed = 0
         self.bytes_wire = 0
         self.comm_seconds = 0.0
+        self.pull_count = 0
+        self.pull_cache_hits = 0          # leaf snapshots served from cache
         self._stats_lock = threading.Lock()   # accounting fields above
         # a wave-completion signal for the trainer's supervision loop
         self.push_event = threading.Event()
@@ -67,10 +91,10 @@ class ParameterServer:
         self.push_event.set()        # wake the supervision loop
 
     # -- WSP protocol -----------------------------------------------------
-    def push_wave(self, wid: str, deltas_tree) -> int:
-        """Apply a wave-aggregated delta; advances the worker's local clock.
-        The wire bytes of the (possibly compressed) push transit the
-        simulated transport before the update lands."""
+    def begin_push(self, wid: str, deltas_tree) -> PendingPush:
+        """Compress a wave-aggregated delta and start its wire transfer.
+        Does not block on the (simulated) network and does not touch
+        w_global; the caller finishes with finish_push."""
         leaves, _ = tree_flatten_np(deltas_tree)
         updates, wire, dense = [], 0, 0
         for i, d in enumerate(leaves):
@@ -83,35 +107,75 @@ class ParameterServer:
             else:
                 wire += flat.nbytes
                 updates.append((i, None, flat))
-        sec = self.transport.send(wid, "ps", wire)
+        send = self.transport.send_async(wid, "ps", wire)
         with self._stats_lock:
             self.bytes_pushed += dense
             self.bytes_wire += wire
-            self.comm_seconds += sec
+            self.comm_seconds += send.seconds
             self.push_count += 1
-        for i, idx, vals in updates:
-            with self._locks[self.shard_of_leaf[i]]:
-                if idx is None:
-                    self.flat[i] += vals
-                else:
-                    self.flat[i][idx] += vals
-        clock = self.clock.complete_wave(wid)
+        return PendingPush(wid, updates, send)
+
+    def finish_push(self, pending: PendingPush) -> int:
+        """Wait for the wire, apply the update (one lock acquisition per
+        touched shard), advance the worker's WSP clock."""
+        assert not pending.applied, "finish_push called twice"
+        pending.send.wait()
+        by_shard: dict[int, list] = {}
+        for upd in pending.updates:
+            by_shard.setdefault(self.shard_of_leaf[upd[0]], []).append(upd)
+        for sid, ups in by_shard.items():
+            with self._locks[sid]:
+                for i, idx, vals in ups:
+                    if idx is None:
+                        self.flat[i] += vals
+                    else:
+                        self.flat[i][idx] += vals
+                self._shard_version[sid] += 1
+        pending.applied = True
+        clock = self.clock.complete_wave(pending.wid)
         self.push_event.set()
         return clock
 
-    def wait_pull_allowed(self, wid: str, timeout: float = 120.0) -> bool:
-        return self.clock.wait_until_allowed(wid, timeout)
+    def push_wave(self, wid: str, deltas_tree) -> int:
+        """Blocking push: the wire bytes of the (possibly compressed) push
+        transit the simulated transport before the update lands."""
+        return self.finish_push(self.begin_push(wid, deltas_tree))
+
+    def wait_pull_allowed(self, wid: str, timeout: float = 120.0,
+                          at_clock: Optional[int] = None) -> bool:
+        return self.clock.wait_until_allowed(wid, timeout, at_clock)
 
     def pull(self, wid: Optional[str] = None):
-        """Snapshot of w_global (consistent per leaf). When the puller is
+        """Snapshot of w_global (consistent per leaf). Leaves whose shard
+        version is unchanged since the last pull are served from a cached
+        snapshot instead of re-copied — the returned arrays are shared
+        between pullers and must be treated as read-only. When the puller is
         identified, the full parameter payload transits the transport."""
         out = []
         nbytes = 0
+        hits = 0
         for i, f in enumerate(self.flat):
-            with self._locks[self.shard_of_leaf[i]]:
-                out.append(f.copy().reshape(self.shapes[i])
+            sid = self.shard_of_leaf[i]
+            with self._locks[sid]:
+                ver = self._shard_version[sid]
+                cached = self._leaf_cache[i]
+                if cached is not None and cached[0] == ver:
+                    arr = cached[1]
+                    hits += 1
+                else:
+                    # astype always copies, detaching the snapshot from flat
+                    arr = (f.reshape(self.shapes[i])
                            .astype(self.dtypes[i]))
+                    # the snapshot is shared between pullers and with the
+                    # cache: an in-place mutation must fail loudly, not
+                    # corrupt every other worker's view
+                    arr.flags.writeable = False
+                    self._leaf_cache[i] = (ver, arr)
+            out.append(arr)
             nbytes += f.nbytes
+        with self._stats_lock:
+            self.pull_count += 1
+            self.pull_cache_hits += hits
         if wid is not None:
             sec = self.transport.send("ps", wid, nbytes)
             with self._stats_lock:
@@ -129,5 +193,6 @@ class ParameterServer:
     def load_state_dict(self, sd):
         for i, f in enumerate(sd["flat"]):
             self.flat[i][:] = f
+        self._shard_version = [v + 1 for v in self._shard_version]
         self.clock.state.clocks = dict(sd["clocks"])
         self.push_count = sd["push_count"]

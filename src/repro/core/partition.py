@@ -101,22 +101,48 @@ def inflight(stage: int, k: int, nm: int) -> int:
 def partition_minmax(flops: np.ndarray, act_bytes: np.ndarray,
                      param_bytes: np.ndarray,
                      devices: list[DeviceProfile], nm: int,
-                     *, opt_bytes_per_param: float = 3.0):
+                     *, opt_bytes_per_param: float = 3.0,
+                     links: list | None = None, overlap: bool = False):
     """Exact DP min-max contiguous partition of L layers over k ordered devices.
 
     Returns (boundaries, stage_times, feasible). boundaries[i] = first layer of
     stage i+1; stage i covers layers [boundaries[i-1], boundaries[i]).
+
+    `links` prices each stage boundary with a real link (any object with a
+    LinkSpec-style transfer_time(nbytes), e.g. from repro.dist.topology's
+    stage_links / ClusterTopology.path_links): links[s] joins stage s to
+    s+1, so alpha (per-message latency) and heterogeneous inter-stage
+    bandwidth both enter the cut. Without it, the legacy per-device
+    link_gbps (pure bandwidth) is used.
+
+    `overlap` makes the stage cost comm/compute-overlap-aware: a stage that
+    sends its boundary activation while computing the next microbatch (the
+    skewed pipeline schedule) is gated by max(compute, comm) instead of
+    their sum — the DP then picks different cuts on overlap-capable
+    clusters (it can afford comm-heavy boundaries next to compute-heavy
+    stages).
     """
     L, k = len(flops), len(devices)
+    if links is not None and len(links) != k - 1:
+        raise ValueError(f"links has {len(links)} entries for {k} stages "
+                         f"(expected k-1 boundary links)")
     pre_f = np.concatenate([[0.0], np.cumsum(flops)])
     pre_p = np.concatenate([[0.0], np.cumsum(param_bytes)])
 
+    def boundary_comm(b: int, s: int) -> float:
+        if b >= L:                                   # last stage sends nothing
+            return 0.0
+        if links:
+            # clamp only for the DP's dead intermediate states (last stage
+            # with b < L, never part of the final traceback)
+            return links[min(s, len(links) - 1)].transfer_time(
+                float(act_bytes[b - 1]))
+        return act_bytes[b - 1] / (devices[s].link_gbps * 1e9)
+
     def stage_time(a: int, b: int, s: int) -> float:
-        d = devices[s]
-        t = (pre_f[b] - pre_f[a]) / d.eff_flops
-        if b < L:                                    # send boundary activation
-            t += act_bytes[b - 1] / (d.link_gbps * 1e9)
-        return t
+        comp = (pre_f[b] - pre_f[a]) / devices[s].eff_flops
+        comm = boundary_comm(b, s)                   # send boundary activation
+        return max(comp, comm) if overlap else comp + comm
 
     def stage_mem(a: int, b: int, s: int) -> float:
         m = (pre_p[b] - pre_p[a]) * (1.0 + opt_bytes_per_param)
@@ -155,12 +181,12 @@ def partition_minmax(flops: np.ndarray, act_bytes: np.ndarray,
 
 def max_concurrent_minibatches(cfg: ArchConfig, devices: list[DeviceProfile],
                                seq_len: int, mb_tokens: int,
-                               nm_cap: int = 32) -> int:
+                               nm_cap: int = 32, **part_kw) -> int:
     """Paper's Max_m: the largest Nm for which a feasible partition exists."""
     fl, pb, ab = layer_costs(cfg, seq_len, mb_tokens)
     best = 0
     for nm in range(1, nm_cap + 1):
-        _, _, ok = partition_minmax(fl, ab, pb, devices, nm)
+        _, _, ok = partition_minmax(fl, ab, pb, devices, nm, **part_kw)
         if ok:
             best = nm
         else:
@@ -168,14 +194,31 @@ def max_concurrent_minibatches(cfg: ArchConfig, devices: list[DeviceProfile],
     return best
 
 
-def pipeline_throughput(times: list[float], nm: int, schedule: str = "1f1b"):
+def pipeline_throughput(times: list[float], nm: int, schedule: str = "1f1b",
+                        *, comm_times: list[float] | None = None,
+                        overlap: bool = False):
     """Minibatches/sec of the steady-state pipeline given stage times.
 
     gpipe: wave of Nm drains per wave -> wave time = (Nm-1)*t_max + sum(t).
     1f1b : continuous injection with Nm in-flight slots -> the pipe saturates
            at 1/t_max once Nm covers the round trip (Nm jobs circulating a
            ring of latency ~sum(t) fwd + bwd).
+
+    When `comm_times` (per-stage boundary-send seconds) is given, the
+    effective per-stage time is compute+comm, or max(compute, comm) under the
+    overlapped schedule — partition_minmax(..., overlap=...) already folds
+    this in, so pass comm_times only for times that are compute-only. A
+    k-stage pipeline has k-1 boundaries, so a length-(k-1) vector (e.g. from
+    stage_links / path_links) is padded with a free last boundary.
     """
+    if comm_times is not None:
+        if len(comm_times) == len(times) - 1:
+            comm_times = list(comm_times) + [0.0]
+        if len(comm_times) != len(times):
+            raise ValueError(f"comm_times has {len(comm_times)} entries for "
+                             f"{len(times)} stages (expected k or k-1)")
+        times = [max(t, c) if overlap else t + c
+                 for t, c in zip(times, comm_times)]
     t_max, t_sum = max(times), sum(times)
     if schedule == "gpipe":
         return nm / ((nm - 1) * t_max + t_sum)

@@ -87,9 +87,22 @@ def _stage_apply(cfg, blocks_local, x, meta_arrs, ctx: LayerCtx, cache_local):
 def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
                   mode: str, nm: int, cache_local=None, pos=None,
                   tp_axis: Optional[str], merge_axis: Optional[str],
-                  seq_offset=0, remat: bool = False):
+                  seq_offset=0, remat: bool = False, overlap: bool = False):
     """x_local [Bl, S, d] (this VW's wave batch). Returns (y [Bl,S,d] — valid
-    on the last stage — cache_local, aux)."""
+    on the last stage — cache_local, aux).
+
+    overlap=False is the baseline (oracle) schedule: each tick computes and
+    then ppermutes its output, so the boundary transfer sits on the critical
+    path between consecutive stages.
+
+    overlap=True is the software-pipelined (skewed) schedule: each tick
+    computes from the buffer *received last tick* while ppermuting the output
+    computed *last tick* — the two ops have no data dependence inside a tick,
+    so the compiler's latency-hiding scheduler can run the collective
+    concurrently with stage compute. The price is one extra tick of skew per
+    stage boundary (ticks = nm + 2(k-1) instead of nm + k-1): microbatch j
+    reaches stage s at tick j + 2s. Per-microbatch compute is identical, so
+    losses/grads match the oracle bit-for-bit."""
     stages = cfg.stages
     si = jax.lax.axis_index(S_AX)
     Bl, S, d = x_local.shape
@@ -97,7 +110,8 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
     x_wave = x_local.reshape(nm, mb, S, d)
     meta_arrs = {k: meta_local[k][0] for k in
                  ("kind", "valid", "full_i", "win_i")}          # [slots]
-    ticks = nm + stages - 1
+    skew = 2 if overlap else 1
+    ticks = nm + skew * (stages - 1)
     perm = [(i, i + 1) for i in range(stages - 1)]
 
     def stage_call(x_in, cache_mb, tick_valid, pos_):
@@ -110,8 +124,12 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
         else stage_call
 
     def tick(carry, t):
-        buf_in, out, cache_c, aux = carry
-        mb_idx = t - si
+        if overlap:
+            buf_in, y_send, out, cache_c, aux = carry
+        else:
+            buf_in, out, cache_c, aux = carry
+            y_send = None
+        mb_idx = t - skew * si
         valid = (mb_idx >= 0) & (mb_idx < nm)
         mb_c = jnp.clip(mb_idx, 0, nm - 1)
         x_fresh = jax.lax.dynamic_index_in_dim(x_wave, mb_c, 0, keepdims=False)
@@ -134,12 +152,19 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
 
             cache_c, y, aux_t = jax.lax.cond(valid, live, dead, cache_c)
         aux = aux + jnp.where(valid, aux_t, 0.0)
-        out_idx = t - (stages - 1)
+        out_idx = t - skew * (stages - 1)
         w_valid = (si == stages - 1) & (out_idx >= 0) & (out_idx < nm)
         oc = jnp.clip(out_idx, 0, nm - 1)
         old = jax.lax.dynamic_index_in_dim(out, oc, 0, keepdims=False)
         out = jax.lax.dynamic_update_index_in_dim(
             out, jnp.where(w_valid, y, old), oc, 0)
+        if overlap:
+            # double-buffered carry: send last tick's output (no dependence
+            # on this tick's stage_fn, so the transfer overlaps the compute);
+            # it is consumed by the next stage one tick after arrival, i.e.
+            # two ticks after it was computed — matching the 2-tick skew.
+            buf_next = jax.lax.ppermute(y_send, S_AX, perm)
+            return (buf_next, y, out, cache_c, aux), None
         buf_next = jax.lax.ppermute(y, S_AX, perm)
         return (buf_next, out, cache_c, aux), None
 
@@ -148,8 +173,10 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
     # shape-(1,) carry: a rank-0 float carry becomes a scalar shard_map
     # residual, which jax 0.4.x partial-eval mis-names ({0: axes} on rank 0)
     aux0 = jnp.zeros((1,), jnp.float32)
-    (_, out, cache_local, aux), _ = jax.lax.scan(
-        tick, (buf0, out0, cache_local, aux0), jnp.arange(ticks))
+    carry0 = ((buf0, jnp.zeros_like(buf0), out0, cache_local, aux0)
+              if overlap else (buf0, out0, cache_local, aux0))
+    final_carry, _ = jax.lax.scan(tick, carry0, jnp.arange(ticks))
+    out, cache_local, aux = final_carry[-3], final_carry[-2], final_carry[-1]
     return out.reshape(Bl, S, d), cache_local, aux[0]
 
 
@@ -197,7 +224,7 @@ def build_train_step(run: RunConfig, mesh: Mesh):
     def body(blocks, x, meta):
         y, _, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="train", nm=nm, tp_axis=tp_axis,
-            merge_axis=None, remat=cfg.remat)
+            merge_axis=None, remat=cfg.remat, overlap=run.overlap)
         aux = jax.lax.psum(aux, S_AX)      # each stage holds its layers' aux
         for ax in dp:                      # aux differs per VW's tokens
             aux = jax.lax.pmean(aux, ax)
@@ -286,7 +313,8 @@ def build_decode_step(run: RunConfig, mesh: Mesh):
             else 0
         y, cache, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="decode", nm=nm, cache_local=cache,
-            pos=pos, tp_axis=tp_axis, merge_axis=merge_axis, seq_offset=so)
+            pos=pos, tp_axis=tp_axis, merge_axis=merge_axis, seq_offset=so,
+            overlap=run.overlap)
         return _bcast_from_last(y, cfg.stages), cache, aux
 
     pipe = shard_map(
@@ -323,7 +351,7 @@ def build_prefill_step(run: RunConfig, mesh: Mesh):
     def body(blocks, x, meta, cache):
         y, cache, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="prefill", nm=nm, cache_local=cache,
-            pos=None, tp_axis=tp_axis, merge_axis=None)
+            pos=None, tp_axis=tp_axis, merge_axis=None, overlap=run.overlap)
         return _bcast_from_last(y[:, -1:], cfg.stages), cache, aux
 
     pipe = shard_map(

@@ -40,9 +40,15 @@ class WSPClockState:
     def global_clock(self) -> int:
         return min(self.clocks.values()) if self.clocks else 0
 
-    def can_proceed(self, wid: str) -> bool:
-        """May `wid` start its next wave (local clock c = clocks[wid])?"""
-        return self.clocks[wid] - self.D <= self.global_clock()
+    def can_proceed(self, wid: str, at_clock: int | None = None) -> bool:
+        """May `wid` start its next wave (local clock c = clocks[wid])?
+
+        `at_clock` evaluates the same gate at a *logical* clock value: an
+        async-pushing worker whose wave-c push is still in flight has
+        clocks[wid] < c, but must gate wave c+1 as if the push had landed —
+        otherwise overlap would silently buy an extra unit of staleness."""
+        c = self.clocks[wid] if at_clock is None else at_clock
+        return c - self.D <= self.global_clock()
 
     def complete_wave(self, wid: str) -> int:
         if not self.can_proceed(wid):
@@ -86,13 +92,15 @@ class WSPClockServer:
         with self._cv:
             return self.state.global_clock()
 
-    def wait_until_allowed(self, wid: str, timeout: float = 120.0) -> bool:
+    def wait_until_allowed(self, wid: str, timeout: float = 120.0,
+                           at_clock: int | None = None) -> bool:
         """Block until `wid` may start its next wave. Returns False on timeout
         or if the worker was deregistered while waiting."""
         import time
         t0 = time.monotonic()
         with self._cv:
-            while wid in self.state.clocks and not self.state.can_proceed(wid):
+            while wid in self.state.clocks and \
+                    not self.state.can_proceed(wid, at_clock):
                 remaining = timeout - (time.monotonic() - t0)
                 if remaining <= 0:
                     return False

@@ -39,6 +39,7 @@ NVLINK = LinkSpec("nvlink", 150.0, 2e-6)
 PCIE = LinkSpec("pcie", 12.0, 5e-6)
 IB_100G = LinkSpec("ib100", 12.5, 2e-5)
 ETH_10G = LinkSpec("eth10", 1.25, 1e-4)      # the paper's 10 Gbps Ethernet
+ETH_1G = LinkSpec("eth1", 0.125, 1e-4)       # whimpy-cluster 1 GbE
 ZERO_LINK = LinkSpec("zero", math.inf, 0.0)
 
 
@@ -88,6 +89,12 @@ class ClusterTopology:
     def link(self, a: str, b: str) -> LinkSpec:
         pa, pb = self._resolve(a), self._resolve(b)
         return pa.intra if pa is pb else self.inter
+
+    def path_links(self, names: list[str]) -> list[LinkSpec]:
+        """Links between consecutive endpoints — e.g. the boundary links of
+        a pipeline whose stage devices are the named workers, in stage
+        order. Feed to core.partition.partition_minmax(links=...)."""
+        return [self.link(a, b) for a, b in zip(names, names[1:])]
 
     # -- point-to-point ---------------------------------------------------
     def p2p_cost(self, a: str, b: str, nbytes: float) -> float:
@@ -172,6 +179,27 @@ class ClusterTopology:
         return cls([p for p in pods if p.workers] or pods[:1], inter=inter)
 
 
+def stage_links(devices: list[DeviceProfile], inter: LinkSpec = ETH_10G,
+                node_latency_s: float = 1e-5) -> list[LinkSpec]:
+    """Boundary links for a pipeline over `devices` (stage order), for the
+    partitioner's link-aware stage_time.
+
+    Allocation policies hand a VW an *ordered* device list in which
+    consecutive devices of the same profile share a node (NP keeps whole
+    nodes; ED/HD sort by type), so a profile change at a stage boundary
+    means the activation crosses the cluster's inter-node link — the
+    paper's profiled-network input to placement (Section 7)."""
+    links = []
+    for a, b in zip(devices, devices[1:]):
+        if a.name == b.name:
+            links.append(LinkSpec(
+                f"{a.name.lower().replace(' ', '-')}-intra",
+                a.link_gbps, node_latency_s))
+        else:
+            links.append(inter)
+    return links
+
+
 def _split_contiguous(num_vw: int, parts: int) -> list[tuple[str, ...]]:
     return [tuple(f"vw{int(i)}" for i in chunk)
             for chunk in np.array_split(np.arange(num_vw), parts)]
@@ -183,7 +211,7 @@ def make_topology(spec: str | None, num_vw: int) -> ClusterTopology | None:
       None | 'none' | 'zero'   — no network model (zero-latency default)
       'single'                 — one NVLink pod
       '<k>node[:ib]'           — k NVLink pods over 10G Ethernet (or 100G IB)
-      'hetero-2node'           — NVLink pod + PCIe pod over 10G Ethernet
+      'hetero' | 'hetero-2node'— NVLink pod + PCIe pod over 10G Ethernet
       'paper'                  — the paper's 4-node V/R/G/Q fleet (Table 1)
     """
     if spec is None:
@@ -194,7 +222,7 @@ def make_topology(spec: str | None, num_vw: int) -> ClusterTopology | None:
     if s == "single":
         return ClusterTopology(
             [Pod("node0", tuple(f"vw{i}" for i in range(num_vw)), NVLINK)])
-    if s == "hetero-2node":
+    if s in ("hetero", "hetero-2node"):
         a, b = _split_contiguous(num_vw, 2)
         return ClusterTopology([Pod("node0", a, NVLINK),
                                 Pod("node1", b, PCIE)], inter=ETH_10G)

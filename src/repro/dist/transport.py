@@ -10,6 +10,12 @@ push/pull routes through Transport.send(src, dst, nbytes), which
     simple contention model: a link is a shared resource, transfers queue),
   - accounts bytes and modeled seconds per link for the training report.
 
+send_async() starts a transfer without blocking the caller: it accounts the
+message immediately and returns an AsyncSend handle whose wait() performs the
+(scaled, link-serialized) delay. A background pusher calling wait() while the
+issuing thread keeps computing is how the runtime charges max(compute, comm)
+per wave instead of the sum.
+
 NullTransport is the zero-latency default: pure accounting, no waiting.
 """
 from __future__ import annotations
@@ -17,6 +23,36 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
+
+
+class AsyncSend:
+    """Handle for an in-flight transfer.
+
+    `seconds` is the modeled (unscaled) link time, known at issue time.
+    wait() performs the scaled sleep (serialized per link) exactly once and
+    is safe to call from any thread; done() reports completion without
+    blocking.
+    """
+
+    def __init__(self, seconds: float = 0.0, waiter=None):
+        self.seconds = float(seconds)
+        self._waiter = waiter
+        self._done = threading.Event()
+        self._wait_lock = threading.Lock()
+        if waiter is None:
+            self._done.set()
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self) -> float:
+        if not self._done.is_set():
+            with self._wait_lock:                # first waiter pays the delay
+                if not self._done.is_set():
+                    self._waiter()
+                    self._done.set()
+        self._done.wait()
+        return self.seconds
 
 
 class NullTransport:
@@ -27,10 +63,13 @@ class NullTransport:
         self.seconds_by_link = defaultdict(float)
         self._stats_lock = threading.Lock()
 
-    def send(self, src: str, dst: str, nbytes: int) -> float:
+    def send_async(self, src: str, dst: str, nbytes: int) -> AsyncSend:
         with self._stats_lock:
             self.bytes_by_link["loopback"] += int(nbytes)
-        return 0.0
+        return AsyncSend(0.0)
+
+    def send(self, src: str, dst: str, nbytes: int) -> float:
+        return self.send_async(src, dst, nbytes).wait()
 
     def stats(self) -> dict:
         return {"bytes_by_link": dict(self.bytes_by_link),
@@ -53,8 +92,9 @@ class SimulatedTransport(NullTransport):
         with self._reg_lock:
             return self._link_locks[link_name]
 
-    def send(self, src: str, dst: str, nbytes: int) -> float:
-        """Returns the modeled (unscaled) transfer seconds."""
+    def send_async(self, src: str, dst: str, nbytes: int) -> AsyncSend:
+        """Account the message now; the returned handle's wait() pays the
+        scaled delay under the link lock (contention) when called."""
         nbytes = int(nbytes)
         cost = self.topology.p2p_cost(src, dst, nbytes)
         link = self.topology.link(src, dst) if cost > 0 else None
@@ -62,10 +102,14 @@ class SimulatedTransport(NullTransport):
         with self._stats_lock:
             self.bytes_by_link[name] += nbytes
             self.seconds_by_link[name] += cost
-        if cost > 0:
-            delay = min(cost * self.time_scale, self.max_sleep_per_msg)
+        if cost <= 0:
+            return AsyncSend(0.0)
+        delay = min(cost * self.time_scale, self.max_sleep_per_msg)
+
+        def waiter():
             # holding the link lock while sleeping serializes transfers that
             # share the link — concurrent pushers contend for bandwidth
             with self._lock_for(name):
                 time.sleep(delay)
-        return cost
+
+        return AsyncSend(cost, waiter)

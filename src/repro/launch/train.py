@@ -46,6 +46,16 @@ def main():
                          "hetero-2node | paper (default: zero-latency)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="scale modeled network delays before sleeping")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap communication with compute: wsp mode pushes "
+                         "wave deltas asynchronously (next wave's forward "
+                         "starts while the push is in flight); spmd mode uses "
+                         "the software-pipelined (skewed) schedule so the "
+                         "boundary ppermute runs concurrently with stage "
+                         "compute")
+    ap.add_argument("--pull-every", type=int, default=1,
+                    help="wsp mode: pull w_global every k waves (local delta "
+                         "updates in between; k>1 lets async pushes overlap)")
     ap.add_argument("--speeds", default=None,
                     help="comma-separated per-VW slowdowns (s/wave)")
     ap.add_argument("--devices", type=int, default=0,
@@ -83,6 +93,11 @@ def main():
 
     if a.mode == "wsp":
         from repro.runtime.trainer import WSPTrainer
+        if a.overlap and a.pull_every == 1:
+            print("note: --overlap with --pull-every 1 serializes every push "
+                  "behind the following pull (each wave starts from freshly "
+                  "pulled weights); use --pull-every > 1 to actually hide "
+                  "push latency", file=sys.stderr)
         from repro.runtime.checkpoint import latest_checkpoint, \
             load_checkpoint
         step = wave.build_local_wave_step(cfg, cfg.num_microbatches, opt)
@@ -100,11 +115,15 @@ def main():
                         compression_ratio=a.compression,
                         codec=a.codec, topology=a.topology,
                         time_scale=a.time_scale,
+                        pull_every=a.pull_every, async_push=a.overlap,
                         ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every)
         rep = tr.run()
         xs, ys = rep.loss_curve()
         print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
               f"first_loss={ys[0]:.4f} last_loss={np.mean(ys[-5:]):.4f}")
+        if a.overlap:
+            print(f"overlap: hidden={rep.overlap_seconds:.2f}s "
+                  f"blocked={rep.push_wait_seconds:.2f}s")
         print(f"pushed={rep.bytes_pushed/1e6:.1f}MB wire="
               f"{rep.bytes_wire/1e6:.1f}MB waits={ {k: round(v,2) for k, v in rep.wait_seconds.items()} }")
         if tr.topology is not None:
@@ -126,7 +145,8 @@ def main():
     params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
     shape = ShapeConfig("cli", a.seq, a.batch * dsz, "train")
     run = RunConfig(arch=cfg, shape=shape, optimizer=a.optimizer, lr=a.lr,
-                    compute_dtype="float32", loss_chunk=min(512, a.seq))
+                    compute_dtype="float32", loss_chunk=min(512, a.seq),
+                    overlap=a.overlap)
     step, _ = wave.build_train_step(run, mesh)
     from repro.data.pipeline import MarkovLM, ShardedLoader
     loader = ShardedLoader(MarkovLM(cfg.vocab_size), shape.global_batch,

@@ -33,6 +33,8 @@ class TrainReport:
     bytes_pushed: int = 0
     bytes_wire: int = 0
     comm_seconds: float = 0.0                       # modeled network time
+    overlap_seconds: float = 0.0                    # comm hidden under compute
+    push_wait_seconds: float = 0.0                  # comm NOT hidden (blocked)
     comm: dict = field(default_factory=dict)        # transport link stats
 
     def loss_curve(self):
@@ -53,7 +55,8 @@ class WSPTrainer:
                  time_scale: float = 1.0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  fail_at: Optional[dict[int, int]] = None,
-                 data_seed: int = 0, pull_every: int = 1):
+                 data_seed: int = 0, pull_every: int = 1,
+                 async_push: bool = False):
         if isinstance(topology, str):
             topology = make_topology(topology, num_vw)
         self.topology = topology
@@ -71,6 +74,7 @@ class WSPTrainer:
         self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
         self.fail_at = fail_at or {}
         self.pull_every = pull_every
+        self.async_push = async_push
         self.stop_event = threading.Event()
         self.workers: dict[str, VirtualWorker] = {}
 
@@ -84,7 +88,8 @@ class WSPTrainer:
             slowdown=self.speeds[i],
             straggle_fn=self.straggle_fns[i],
             stop_event=self.stop_event,
-            fail_at_wave=self.fail_at.get(i))
+            fail_at_wave=self.fail_at.get(i),
+            async_push=self.async_push)
 
     def run(self, *, rejoin_failed_after: Optional[float] = None
             ) -> TrainReport:
@@ -136,6 +141,8 @@ class WSPTrainer:
             for t, l in zip(w.metrics.wall_clock, w.metrics.losses):
                 report.losses.append((t, wid, l))
             report.waves += w.metrics.waves
+            report.overlap_seconds += w.metrics.overlap_seconds
+            report.push_wait_seconds += w.metrics.push_wait_seconds
         report.wall_s = time.monotonic() - t0
         report.wait_seconds = dict(self.ps.clock.wait_seconds)
         report.bytes_pushed = self.ps.bytes_pushed

@@ -5,9 +5,19 @@ On real hardware each VW runs the jitted pipelined wave step on its mesh
 slice; here the wave step is any callable (the single-device oracle on CPU,
 the shard_map pipeline on a fake mesh) — the WSP protocol is identical.
 Heterogeneity is simulated with per-VW speed factors / straggle schedules.
+
+With async_push=True the VW overlaps its wave-aggregated push with the next
+wave's compute (paper Section 5 / XPipe-style weight handling): the delta is
+handed to a per-worker outbox thread which pays the transport delay, applies
+the update, and advances the WSP clock when the push *lands*. The VW starts
+the next wave's forward immediately on its locally-updated weights, gating
+each wave at its logical clock (at_clock) so overlap never buys extra
+staleness, and waiting for the in-flight push before the next push (ordering)
+or any pull (a pull must see the worker's own landed wave).
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from dataclasses import dataclass, field
@@ -23,6 +33,50 @@ class VWMetrics:
     wave_times: list = field(default_factory=list)
     wall_clock: list = field(default_factory=list)
     waves: int = 0
+    overlap_seconds: float = 0.0    # in-flight push time hidden under compute
+    push_wait_seconds: float = 0.0  # time blocked on an in-flight push
+
+
+class _PushHandle:
+    __slots__ = ("event", "clock", "enqueued_at", "landed_at", "exc")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.clock = None
+        self.enqueued_at = time.monotonic()
+        self.landed_at = None
+        self.exc = None
+
+
+class _Outbox(threading.Thread):
+    """Per-worker background pusher: drains queued deltas into the PS in
+    FIFO order, paying the transport delay off the worker's critical path."""
+
+    def __init__(self, wid: str, ps):
+        super().__init__(daemon=True, name=f"{wid}-outbox")
+        self.wid, self.ps = wid, ps
+        self._q: queue.Queue = queue.Queue()
+
+    def submit(self, deltas) -> _PushHandle:
+        h = _PushHandle()
+        self._q.put((deltas, h))
+        return h
+
+    def close(self):
+        self._q.put(None)
+
+    def run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            deltas, h = item
+            try:
+                h.clock = self.ps.push_wave(self.wid, deltas)
+            except Exception as e:          # surfaced at the next await
+                h.exc = e
+            h.landed_at = time.monotonic()
+            h.event.set()
 
 
 class VirtualWorker(threading.Thread):
@@ -31,7 +85,8 @@ class VirtualWorker(threading.Thread):
                  slowdown: float = 0.0,
                  straggle_fn: Optional[Callable[[int], float]] = None,
                  stop_event: Optional[threading.Event] = None,
-                 fail_at_wave: Optional[int] = None):
+                 fail_at_wave: Optional[int] = None,
+                 async_push: bool = False):
         super().__init__(daemon=True, name=wid)
         self.wid, self.ps, self.wave_step = wid, ps, wave_step
         self.loader, self.opt_state = loader, opt_state
@@ -39,22 +94,55 @@ class VirtualWorker(threading.Thread):
         self.slowdown, self.straggle_fn = slowdown, straggle_fn
         self.stop_event = stop_event or threading.Event()
         self.fail_at_wave = fail_at_wave
+        self.async_push = async_push
         self.metrics = VWMetrics()
         self.failed = False
         self.params = None
+        self._outbox: Optional[_Outbox] = None
+        self._inflight: Optional[_PushHandle] = None
+
+    def _await_inflight(self, timeout: float = 120.0, compute_span=None):
+        """Block until the in-flight push (if any) has landed. `compute_span`
+        is the [start, end) wall interval of the wave's work (loader +
+        wave step + simulated slowdown) that ran while the push was in
+        flight; only the flight time inside that interval is credited as
+        overlap — time blocked at the WSP gate saved no wall clock and is
+        already visible in wait_seconds."""
+        h, self._inflight = self._inflight, None
+        if h is None:
+            return
+        t_wait = time.monotonic()
+        if not h.event.wait(timeout):
+            raise TimeoutError(f"{self.wid}: async push did not land")
+        if h.exc is not None:
+            raise h.exc
+        now = time.monotonic()
+        self.metrics.push_wait_seconds += now - t_wait
+        if compute_span is not None:
+            c0, c1 = compute_span
+            self.metrics.overlap_seconds += max(
+                0.0, min(h.landed_at, c1) - max(h.enqueued_at, c0))
 
     def run(self):
         t_start = time.monotonic()
         self.ps.register(self.wid)
         self.params = self.ps.pull(self.wid)
         wave = self.ps.clock.local_clock(self.wid)
+        if self.async_push:
+            self._outbox = _Outbox(self.wid, self.ps)
+            self._outbox.start()
         try:
             while wave < self.max_waves and not self.stop_event.is_set():
                 if self.fail_at_wave is not None and wave == self.fail_at_wave:
                     self.failed = True
+                    self._await_inflight()
                     self.ps.deregister(self.wid)      # simulated node failure
                     return
-                if not self.ps.wait_pull_allowed(self.wid, timeout=120.0):
+                # gate at the logical clock: `wave` counts enqueued pushes,
+                # so the staleness predicate matches the blocking runtime
+                # even while a push is still in flight
+                if not self.ps.wait_pull_allowed(self.wid, timeout=120.0,
+                                                 at_clock=wave):
                     break
                 t0 = time.monotonic()
                 x, y = self.loader.next()
@@ -66,16 +154,33 @@ class VirtualWorker(threading.Thread):
                     extra += self.straggle_fn(wave)
                 if extra > 0:
                     time.sleep(extra)
-                wave = self.ps.push_wave(self.wid, deltas)
+                if self._outbox is not None:
+                    # pushes land in order: wave w-1 must be applied before
+                    # wave w's transfer may complete
+                    self._await_inflight(compute_span=(t0, time.monotonic()))
+                    self._inflight = self._outbox.submit(deltas)
+                    wave += 1
+                else:
+                    wave = self.ps.push_wave(self.wid, deltas)
                 # local weights see their own wave immediately (paper Sec. 4)
-                self.params = jax.tree.map(np.add, self.params,
-                                           jax.tree.map(np.asarray, deltas))
+                # — unless the pull below replaces them wholesale anyway
+                if self.pull_every != 1:
+                    self.params = jax.tree.map(np.add, self.params,
+                                               jax.tree.map(np.asarray,
+                                                            deltas))
                 if self.pull_every and wave % self.pull_every == 0:
+                    # a pull must include this worker's own landed wave
+                    self._await_inflight()
                     self.params = self.ps.pull(self.wid)
                 self.metrics.losses.append(loss)
                 self.metrics.wave_times.append(time.monotonic() - t0)
                 self.metrics.wall_clock.append(time.monotonic() - t_start)
                 self.metrics.waves = wave
+            self._await_inflight()
         except Exception:
             self.failed = True
             raise
+        finally:
+            if self._outbox is not None:
+                self._outbox.close()
+                self._outbox.join(timeout=10.0)

@@ -208,6 +208,68 @@ def test_simulated_transport_accounts_and_delays():
     assert NullTransport().send("a", "b", 100) == 0.0
 
 
+def test_send_async_defers_delay_but_accounts_immediately():
+    """send_async must price and account the message at issue time, pay the
+    (scaled) delay only in wait(), and wait() must be idempotent."""
+    import time
+    topo = make_topology("2node", 2)
+    tr = SimulatedTransport(topo, time_scale=1.0)
+    t0 = time.monotonic()
+    h = tr.send_async("vw1", "ps", int(1e8))         # ~80ms on 10G Ethernet
+    issue_s = time.monotonic() - t0
+    assert issue_s < 0.5 * h.seconds                 # issue did not sleep
+    assert h.seconds == pytest.approx(ETH_10G.transfer_time(1e8))
+    assert tr.bytes_by_link[ETH_10G.name] == int(1e8)   # accounted already
+    assert not h.done()
+    t1 = time.monotonic()
+    assert h.wait() == h.seconds
+    assert time.monotonic() - t1 >= 0.5 * h.seconds  # wait paid the delay
+    assert h.done()
+    t2 = time.monotonic()
+    h.wait()                                         # idempotent: no re-sleep
+    assert time.monotonic() - t2 < 0.5 * h.seconds
+    # a local (free) transfer completes at issue time
+    assert tr.send_async("vw0", "ps", 100).done()
+
+
+def test_ps_pull_caches_unchanged_shards():
+    """pull() must serve leaf snapshots from cache while the owning shard's
+    version is unchanged, and re-copy after a push touches it."""
+    ps = ParameterServer(_params(), D=0, num_shards=2)
+    ps.register("w0")
+    a = ps.pull()
+    assert ps.pull_cache_hits == 0
+    b = ps.pull()
+    assert ps.pull_cache_hits == len(ps.flat)        # all leaves cached
+    assert all(x is y for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    deltas = {"a": np.ones((8, 8), np.float32), "b": np.ones(16, np.float32)}
+    ps.push_wave("w0", deltas)                       # bumps both shards
+    c = ps.pull()
+    assert not any(x is y for x, y in
+                   zip(jax.tree.leaves(b), jax.tree.leaves(c)))
+    np.testing.assert_allclose(np.asarray(c["a"]),
+                               np.asarray(b["a"]) + 1.0)
+
+
+def test_ps_begin_finish_push_split():
+    """begin_push accounts and starts the wire without touching w_global;
+    finish_push applies and advances the WSP clock."""
+    ps = ParameterServer(_params(), D=0)
+    ps.register("w0")
+    before = [f.copy() for f in ps.flat]
+    pending = ps.begin_push("w0", {"a": np.ones((8, 8), np.float32),
+                                   "b": np.ones(16, np.float32)})
+    assert ps.bytes_pushed > 0                       # accounted at begin
+    for f, b in zip(ps.flat, before):
+        np.testing.assert_array_equal(f, b)          # not applied yet
+    assert ps.clock.state.clocks["w0"] == 0
+    assert ps.finish_push(pending) == 1
+    assert ps.clock.state.clocks["w0"] == 1
+    assert float(ps.flat[0][0]) == pytest.approx(2.0)   # ones + delta
+    with pytest.raises(AssertionError):
+        ps.finish_push(pending)                      # double-finish rejected
+
+
 CFG = reduced(ARCHS["qwen3-0.6b"], num_layers=2, d_model=32, d_ff=64,
               vocab_size=256, num_heads=2, num_kv_heads=2, head_dim=16,
               num_microbatches=2)

@@ -100,6 +100,101 @@ def test_position_dependent_memory_model():
     assert inflight(3, 4, 8) == 1
 
 
+def test_link_aware_stage_time_prices_alpha_beta():
+    """With real boundary links the DP pays latency + bytes/bandwidth on the
+    link joining consecutive stages, not the sender's own link_gbps."""
+    from repro.dist.topology import LinkSpec
+    L = 8
+    flops = np.full(L, 1e12)
+    act = np.full(L, 1e6)
+    par = np.full(L, 1e6)
+    devs = [DeviceProfile("d", 100.0, 64.0, link_gbps=50.0)] * 2
+    slow = [LinkSpec("slow", 0.001, 0.5)]          # 1 MB/s + 0.5 s alpha
+    _, t_fast, ok1 = partition_minmax(flops, act, par, devs, nm=2)
+    _, t_slow, ok2 = partition_minmax(flops, act, par, devs, nm=2,
+                                      links=slow)
+    assert ok1 and ok2
+    # the slow boundary link dominates stage 0's time: alpha alone is 0.5 s
+    assert max(t_slow) > max(t_fast) + 0.4
+
+
+def test_overlap_stage_time_is_max_of_compute_and_comm():
+    """overlap=True gates each stage at max(compute, comm); with comm >>
+    compute on the only boundary, the minmax time collapses from
+    compute+comm to comm, and is never worse than the serial schedule."""
+    from repro.dist.topology import LinkSpec
+    L, k = 4, 2
+    flops = np.full(L, 1e12)
+    act = np.full(L, 1e6)
+    par = np.full(L, 1e6)
+    devs = [DeviceProfile("d", 100.0, 64.0)] * k
+    link = [LinkSpec("wan", 0.01, 0.0)]            # 0.1 s per boundary send
+    b_s, t_serial, _ = partition_minmax(flops, act, par, devs, nm=2,
+                                        links=link)
+    b_o, t_over, _ = partition_minmax(flops, act, par, devs, nm=2,
+                                      links=link, overlap=True)
+    comm = link[0].transfer_time(act[0])
+    comp0 = sum(flops[b_o[0]:b_o[1]]) / devs[0].eff_flops
+    assert max(t_over) <= max(t_serial)
+    assert t_over[0] == pytest.approx(max(comp0, comm))
+    assert b_o[0] == 0 and b_o[-1] == L
+
+
+def test_overlap_aware_dp_moves_cuts():
+    """On a comm-heavy boundary the serial DP sheds compute from the sending
+    stage to compensate; the overlap DP does not need to — the two must pick
+    different cuts and overlap must win."""
+    from repro.dist.topology import LinkSpec
+    L = 12
+    flops = np.full(L, 1e12)
+    act = np.full(L, 1e6)
+    par = np.full(L, 1e6)
+    devs = [DeviceProfile("d", 100.0, 64.0)] * 2
+    # comm ~ one layer's compute: serial DP trades a layer, overlap doesn't
+    link = [LinkSpec("wan", act[0] / (flops[0] / devs[0].eff_flops) / 1e9,
+                     0.0)]
+    b_s, t_s, _ = partition_minmax(flops, act, par, devs, nm=2, links=link)
+    b_o, t_o, _ = partition_minmax(flops, act, par, devs, nm=2, links=link,
+                                   overlap=True)
+    assert max(t_o) < max(t_s)
+    assert b_s != b_o
+
+
+def test_pipeline_throughput_comm_times_and_path_links():
+    """pipeline_throughput with separate compute/comm vectors, and
+    ClusterTopology.path_links as a links source for the DP."""
+    from repro.core.partition import pipeline_throughput
+    from repro.dist.topology import make_topology
+    comp, comm = [1.0, 1.0], [0.5, 0.0]
+    serial = pipeline_throughput(comp, 4, comm_times=comm)
+    over = pipeline_throughput(comp, 4, comm_times=comm, overlap=True)
+    assert serial == pytest.approx(min(1 / 1.5, 4 / (2 * 2.5)))
+    assert over == pytest.approx(min(1 / 1.0, 4 / (2 * 2.0)))
+    assert over > serial
+    topo = make_topology("hetero", 4)
+    links = topo.path_links(["vw0", "vw1", "vw2", "vw3"])
+    assert [l.name for l in links] == ["nvlink", "eth10", "pcie"]
+    L = 6
+    bounds, times, ok = partition_minmax(
+        np.full(L, 1e12), np.full(L, 1e6), np.full(L, 1e6),
+        [DeviceProfile("d", 100.0, 64.0)] * 3, nm=2, links=links[:2])
+    assert ok and len(times) == 3
+
+
+def test_vw_throughputs_overlap_and_links():
+    from repro.dist.topology import ETH_1G
+    from repro.core.allocation import vw_throughputs
+    cfg = ARCHS["qwen3-0.6b"]
+    vws = [[PAPER_GPUS["V"]] * 2 + [PAPER_GPUS["Q"]] * 2]
+    base = vw_throughputs(cfg, vws, 4096, 4 * 4096, nm=4)
+    linked = vw_throughputs(cfg, vws, 4096, 4 * 4096, nm=4, inter=ETH_1G)
+    over = vw_throughputs(cfg, vws, 4096, 4 * 4096, nm=4, inter=ETH_1G,
+                          overlap=True)
+    assert base[0] > 0
+    assert linked[0] < base[0]          # 1 GbE boundary costs throughput
+    assert over[0] >= linked[0]         # overlap can only help
+
+
 def test_max_m_shrinks_with_memory():
     cfg = ARCHS["qwen3-0.6b"]
     big = [DeviceProfile("big", 100, 24.0)] * 4

@@ -88,6 +88,63 @@ def test_elastic_fail_and_rejoin():
     assert rj.metrics.waves > 0 or clock == 8, (rj.metrics.waves, clock)
 
 
+def test_async_push_matches_blocking_runtime():
+    """Single-VW determinism: the async-push runtime (outbox thread, clock
+    advanced at push-land time) must reproduce the blocking runtime's WSP
+    clock trace, loss sequence, and final PS params exactly at
+    time_scale=0-equivalent conditions."""
+    params, opt, step = _setup()
+    reps, trs = {}, {}
+    for mode in (False, True):
+        tr = WSPTrainer(params, step, opt, num_vw=1, D=1, batch=4, seq=32,
+                        vocab=CFG.vocab_size, max_waves=6, pull_every=2,
+                        async_push=mode)
+        reps[mode] = tr.run()
+        trs[mode] = tr
+    assert trs[True].ps.clock.state.clocks == trs[False].ps.clock.state.clocks
+    assert reps[True].waves == reps[False].waves == 6
+    np.testing.assert_array_equal(reps[True].loss_curve()[1],
+                                  reps[False].loss_curve()[1])
+    for a, b in zip(trs[True].ps.flat, trs[False].ps.flat):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_push_multi_vw_converges_and_overlaps():
+    """Two async VWs over a simulated heterogeneous network: training still
+    converges, every wave lands (clocks reach max_waves), and part of the
+    push time is hidden under the next wave's compute."""
+    from repro.dist.topology import ClusterTopology, LinkSpec, Pod, NVLINK
+    params, opt, step = _setup()
+    slow_eth = LinkSpec("slow-eth", 0.05, 0.01)
+    topo = ClusterTopology([Pod("node0", ("vw0",), NVLINK),
+                            Pod("node1", ("vw1",), NVLINK)], inter=slow_eth)
+    tr = WSPTrainer(params, step, opt, num_vw=2, D=2, batch=8, seq=32,
+                    vocab=CFG.vocab_size, max_waves=12, pull_every=4,
+                    topology=topo, time_scale=1.0, speeds=[0.02, 0.02],
+                    async_push=True)
+    rep = tr.run()
+    assert tr.ps.clock.state.clocks == {"vw0": 12, "vw1": 12}
+    assert _final_loss(rep) < rep.loss_curve()[1][0] - 0.3
+    assert rep.overlap_seconds > 0.0          # some comm was hidden
+    assert rep.comm_seconds > 0.0
+
+
+def test_async_push_respects_staleness_gate():
+    """With D=0 the async runtime degenerates to lock step: neither worker
+    may run a wave ahead even though pushes land off-thread — the fast
+    worker provably blocks at the gate waiting for the slow one."""
+    params, opt, step = _setup()
+    tr = WSPTrainer(params, step, opt, num_vw=2, D=0, batch=4, seq=32,
+                    vocab=CFG.vocab_size, max_waves=6, async_push=True,
+                    speeds=[0.0, 0.05])
+    tr.run()
+    clocks = tr.ps.clock.state.clocks
+    assert clocks == {"vw0": 6, "vw1": 6}
+    # vw1 sleeps 0.05 s/wave; under D=0 lock step vw0 must absorb most of
+    # that at the gate — if gating were broken vw0 would never wait
+    assert tr.ps.clock.wait_seconds["vw0"] > 0.1
+
+
 def test_compression_error_feedback_converges():
     params, opt, step = _setup(lr=0.3)
     tr = WSPTrainer(params, step, opt, num_vw=2, D=0, batch=8, seq=32,

@@ -32,5 +32,17 @@ def test_pipelined_train_equals_oracle(arch):
 
 @pytest.mark.parametrize("arch", ["gemma3-1b"])
 def test_pipelined_decode_equals_oracle(arch):
+    """Covers both serve schedules: baseline vs reference (tolerance) and
+    skewed-overlap vs baseline (exact)."""
     out = _run(arch, "decode")
     assert "decode_logits_diff" in out
+    assert "decode_overlap_diff=0.000e+00" in out
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b"])
+def test_overlap_schedule_equals_oracle(arch):
+    """The software-pipelined (skewed) schedule must be loss- and
+    param-identical to the baseline schedule — same compute per microbatch,
+    only the comm/compute interleaving changes."""
+    out = _run(arch, "overlap")
+    assert "overlap_loss_diff=0.000e+00" in out
