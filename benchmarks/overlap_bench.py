@@ -36,6 +36,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import ClusterSpec, Engine, Plan, RunSpec, WSP
 from repro.configs import ARCHS, reduced
 from repro.core import wave
 from repro.core.partition import (PAPER_GPUS, layer_costs, partition_minmax,
@@ -43,7 +44,6 @@ from repro.core.partition import (PAPER_GPUS, layer_costs, partition_minmax,
 from repro.dist.topology import ETH_1G, ETH_10G, make_topology, stage_links
 from repro.models import lm
 from repro.optim import make_optimizer
-from repro.runtime.trainer import WSPTrainer
 
 NUM_VW = 2
 D = 2
@@ -99,23 +99,28 @@ def runtime_sweep(arch_names, topo_specs, waves):
         ref_cost = max(ref.p2p_cost(f"vw{i}", "ps", push_bytes)
                        for i in range(NUM_VW))
         time_scale = t_comp / ref_cost if ref_cost > 0 else 0.0
+        base = Plan(cluster=ClusterSpec(num_vw=NUM_VW),
+                    sync=WSP(D=D),
+                    run=RunSpec(max_waves=2, batch=BATCH, seq=SEQ,
+                                vocab=cfg.vocab_size))
         # throwaway run: everything (jit cache, worker threads, loaders)
         # warm before any timed cell
-        WSPTrainer(params, step, opt, num_vw=NUM_VW, D=D, batch=BATCH,
-                   seq=SEQ, vocab=cfg.vocab_size, max_waves=2).run()
+        Engine(base, params=params, wave_step=step, optimizer=opt).fit()
         for spec in topo_specs:
             cell = {"arch": name, "topology": spec,
                     "time_scale": time_scale,
                     "wave_compute_s": t_comp, "push_bytes": int(push_bytes)}
             for mode, async_push in (("blocking", False), ("async", True)):
-                tr = WSPTrainer(params, step, opt, num_vw=NUM_VW, D=D,
-                                batch=BATCH, seq=SEQ, vocab=cfg.vocab_size,
-                                max_waves=waves, pull_every=PULL_EVERY,
-                                speeds=[SLOWDOWN] * NUM_VW,
-                                topology=make_topology(spec, NUM_VW),
-                                time_scale=time_scale,
-                                async_push=async_push)
-                rep = tr.run()
+                plan = base.replace(
+                    cluster=ClusterSpec(num_vw=NUM_VW,
+                                        topology=make_topology(spec, NUM_VW),
+                                        speeds=[SLOWDOWN] * NUM_VW,
+                                        time_scale=time_scale),
+                    sync=WSP(D=D, pull_every=PULL_EVERY,
+                             async_push=async_push),
+                    run__max_waves=waves)
+                rep = Engine(plan, params=params, wave_step=step,
+                             optimizer=opt).fit()
                 cell[mode] = {
                     "wall_s": rep.wall_s, "waves": rep.waves,
                     "comm_seconds": rep.comm_seconds,

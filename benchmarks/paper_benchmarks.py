@@ -22,7 +22,7 @@ from repro.core.wave import build_local_wave_step
 from repro.models import lm
 from repro.models.cnn import PAPER_MODELS
 from repro.optim import make_optimizer
-from repro.runtime.trainer import WSPTrainer, bsp_allreduce_baseline
+from repro.api import BSP, ClusterSpec, Engine, Plan, RunSpec, WSP
 
 NODES = [Node(PAPER_GPUS[c], 4) for c in "VRGQ"]
 
@@ -120,20 +120,19 @@ def fig5_6_convergence(max_waves: int = 14):
     opt = make_optimizer("sgd", 0.3)
     step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
     speeds = [0.0, 0.08]                      # one straggling VW
+    base = Plan(cluster=ClusterSpec(num_vw=2, speeds=speeds), sync=BSP(),
+                run=RunSpec(max_waves=max_waves, batch=8, seq=32,
+                            vocab=cfg.vocab_size))
     out = []
     t0 = time.time()
-    rep = bsp_allreduce_baseline(params, step, opt, num_vw=2, batch=8,
-                                 seq=32, vocab=cfg.vocab_size,
-                                 max_waves=max_waves, speeds=speeds)
+    rep = Engine(base, params=params, wave_step=step, optimizer=opt).fit()
     xs, ys = rep.loss_curve()
     out.append(("fig5/bsp_allreduce/final_loss", (time.time() - t0) * 1e6,
                 float(np.mean(ys[-6:]))))
     for D in (0, 4, 32):
         t0 = time.time()
-        tr = WSPTrainer(params, step, opt, num_vw=2, D=D, batch=8, seq=32,
-                        vocab=cfg.vocab_size, max_waves=max_waves,
-                        speeds=speeds)
-        rep = tr.run()
+        rep = Engine(base.replace(sync=WSP(D=D)), params=params,
+                     wave_step=step, optimizer=opt).fit()
         xs, ys = rep.loss_curve()
         out.append((f"fig6/wsp_D{D}/final_loss", (time.time() - t0) * 1e6,
                     float(np.mean(ys[-6:]))))
@@ -148,11 +147,13 @@ def sec84_wait_time(max_waves: int = 10):
     step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
     waits = {}
     for D in (0, 4):
-        tr = WSPTrainer(params, step, opt, num_vw=2, D=D, batch=8, seq=32,
-                        vocab=cfg.vocab_size, max_waves=max_waves,
-                        speeds=[0.0, 0.06])
-        tr.run()
-        waits[D] = float(np.mean(list(tr.ps.clock.wait_seconds.values())))
+        plan = Plan(cluster=ClusterSpec(num_vw=2, speeds=[0.0, 0.06]),
+                    sync=WSP(D=D),
+                    run=RunSpec(max_waves=max_waves, batch=8, seq=32,
+                                vocab=cfg.vocab_size))
+        rep = Engine(plan, params=params, wave_step=step,
+                     optimizer=opt).fit()
+        waits[D] = float(np.mean(list(rep.wait_seconds.values())))
     ratio = waits[4] / max(waits[0], 1e-9)
     return [("sec84/wait_D4_over_D0", 0.0, ratio)]
 
@@ -165,9 +166,10 @@ def wave_sync_comm_saving():
     opt = make_optimizer("sgd", 0.3)
     nm = cfg.num_microbatches
     step = build_local_wave_step(cfg, nm, opt)
-    tr = WSPTrainer(params, step, opt, num_vw=2, D=0, batch=8, seq=32,
-                    vocab=cfg.vocab_size, max_waves=6)
-    rep = tr.run()
+    plan = Plan(cluster=ClusterSpec(num_vw=2), sync=WSP(D=0),
+                run=RunSpec(max_waves=6, batch=8, seq=32,
+                            vocab=cfg.vocab_size))
+    rep = Engine(plan, params=params, wave_step=step, optimizer=opt).fit()
     per_minibatch_bytes = rep.bytes_pushed * nm   # counterfactual
     return [("wsp/comm_saving_factor", 0.0,
              per_minibatch_bytes / max(rep.bytes_pushed, 1))]

@@ -8,18 +8,14 @@
 
   PYTHONPATH=src python examples/hetero_cluster_sim.py
 """
-import jax
 import numpy as np
 
+from repro.api import BSP, ClusterSpec, Engine, Plan, RunSpec, WSP
 from repro.configs import ARCHS, reduced
 from repro.core.allocation import Node, allocate, vw_throughputs, \
     straggler_report, straggler_report_comm
 from repro.core.partition import PAPER_GPUS
 from repro.dist.topology import ClusterTopology
-from repro.core.wave import build_local_wave_step
-from repro.models import lm
-from repro.optim import make_optimizer
-from repro.runtime.trainer import WSPTrainer, bsp_allreduce_baseline
 
 NODES = [Node(PAPER_GPUS[c], 4) for c in "VRGQ"]
 MODEL = ARCHS["h2o-danube-1.8b"]          # stand-in for the paper's VGG-19
@@ -48,9 +44,6 @@ print("\n== real WSP training with NP-induced straggling (Figs. 5/6) ==")
 cfg = reduced(MODEL, num_layers=2, d_model=32, d_ff=64, vocab_size=256,
               num_heads=2, num_kv_heads=2, head_dim=16, num_microbatches=2,
               window_size=0, attn_type="full")
-params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-opt = make_optimizer("sgd", 0.3)
-step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
 # per-VW slowdowns proportional to the NP allocation's speed imbalance;
 # infeasible VWs (zero throughput — the model does not fit) get a fixed
 # large straggle instead of an infinite one
@@ -58,13 +51,14 @@ th = policy_speed["NP"]
 slow = [0.1 * (th.max() / t - 1.0) if t > 0 else 0.5 for t in th]
 print(f"  per-VW extra seconds/wave: {[round(s, 3) for s in slow]}")
 
-rep_bsp = bsp_allreduce_baseline(params, step, opt, num_vw=4, batch=4,
-                                 seq=32, vocab=cfg.vocab_size, max_waves=8,
-                                 speeds=slow)
+# one Plan per scenario: identical model/fleet/run, only the SyncPolicy moves
+base = Plan(arch=cfg,
+            cluster=ClusterSpec(num_vw=4, speeds=slow),
+            sync=BSP(),
+            run=RunSpec(max_waves=8, batch=4, seq=32))
+rep_bsp = Engine(base).fit()
 for D in (0, 4):
-    tr = WSPTrainer(params, step, opt, num_vw=4, D=D, batch=4, seq=32,
-                    vocab=cfg.vocab_size, max_waves=8, speeds=slow)
-    rep = tr.run()
+    rep = Engine(base.replace(sync=WSP(D=D))).fit()
     t, loss = rep.loss_curve()
     waits = np.mean(list(rep.wait_seconds.values()))
     print(f"  WSP D={D}: wall={rep.wall_s:5.1f}s final_loss="

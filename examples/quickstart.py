@@ -1,36 +1,33 @@
-"""Quickstart: HetPipe in 40 lines — two virtual workers training one model
-through the WSP parameter server (D=1), on CPU, in seconds.
+"""Quickstart: HetPipe in 25 lines — declare a Plan, run it with the Engine.
+
+Two virtual workers train one model through the WSP parameter server (D=1),
+on CPU, in seconds.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import numpy as np
 
+from repro.api import ClusterSpec, Engine, Plan, RunSpec, WSP
 from repro.configs import ARCHS, reduced
-from repro.core.wave import build_local_wave_step
-from repro.models import lm
-from repro.optim import make_optimizer
-from repro.runtime.trainer import WSPTrainer
 
 # a tiny qwen3-family model (the full config is ARCHS["qwen3-0.6b"])
 cfg = reduced(ARCHS["qwen3-0.6b"], num_layers=2, d_model=32, d_ff=64,
               vocab_size=256, num_heads=2, num_kv_heads=2, head_dim=16,
               num_microbatches=2)
 
-params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-opt = make_optimizer("sgd", 0.3)
+plan = Plan(
+    arch=cfg,
+    cluster=ClusterSpec(num_vw=2),       # two virtual workers (DP)
+    sync=WSP(D=1),                       # global staleness bound
+    run=RunSpec(max_waves=15, batch=8, seq=32, optimizer="sgd", lr=0.3),
+)
 
 # each wave = Nm pipelined minibatches; one aggregated push per wave (WSP)
-wave_step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
-
-trainer = WSPTrainer(params, wave_step, opt,
-                     num_vw=2,          # two virtual workers (DP)
-                     D=1,               # global staleness bound
-                     batch=8, seq=32, vocab=cfg.vocab_size, max_waves=15)
-report = trainer.run()
+report = Engine(plan).fit()
 
 t, loss = report.loss_curve()
 print(f"waves={report.waves}  loss {loss[0]:.3f} -> {np.mean(loss[-4:]):.3f}"
       f"  wall={report.wall_s:.1f}s  pushed={report.bytes_pushed/1e6:.1f}MB")
 assert np.mean(loss[-4:]) < loss[0], "did not learn"
-print("OK — see examples/train_lm.py for the full driver")
+print("OK — see examples/train_lm.py for the full driver, "
+      "repro.api.presets for canonical scenarios")

@@ -1,5 +1,6 @@
 """End-to-end LM training driver: data pipeline -> pipelined wave steps ->
-WSP sync -> checkpoints, with resume. Presets:
+WSP sync -> checkpoints, with resume — all declared as a repro.api Plan.
+Presets:
 
   demo (default) ~2M params, a few hundred waves in ~2 min on CPU
   100m           a ~100M-param qwen3-family config (the assignment's
@@ -12,15 +13,11 @@ WSP sync -> checkpoints, with resume. Presets:
 import argparse
 import os
 
-import jax
 import numpy as np
 
+from repro.api import ClusterSpec, Engine, Plan, RunSpec, WSP
 from repro.configs import ARCHS, reduced
-from repro.core.wave import build_local_wave_step
-from repro.models import lm
 from repro.optim import make_optimizer, warmup_cosine
-from repro.runtime.checkpoint import latest_checkpoint, load_checkpoint
-from repro.runtime.trainer import WSPTrainer
 
 PRESETS = {
     # ~2M params: quick CPU demo
@@ -46,32 +43,31 @@ def main():
     a = ap.parse_args()
 
     cfg = reduced(ARCHS["qwen3-0.6b"], **PRESETS[a.preset])
-    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-    n_params = sum(np.size(x) for x in jax.tree.leaves(params))
-    print(f"preset={a.preset} params={n_params/1e6:.1f}M "
+    print(f"preset={a.preset} params={cfg.param_count()/1e6:.1f}M "
           f"vw={a.num_vw} D={a.D}")
 
-    opt = make_optimizer("momentum",
-                         warmup_cosine(0.1, 20, a.waves))
-    step = build_local_wave_step(cfg, cfg.num_microbatches, opt)
+    plan = Plan(
+        arch=cfg,
+        cluster=ClusterSpec(num_vw=a.num_vw),
+        sync=WSP(D=a.D),
+        run=RunSpec(max_waves=a.waves, batch=a.batch, seq=a.seq,
+                    ckpt_dir=a.ckpt, ckpt_every=25, resume=True))
+    # a schedule the RunSpec's (optimizer, lr) strings cannot express is
+    # injected — the Engine builds the wave step around it
+    opt = make_optimizer("momentum", warmup_cosine(0.1, 20, a.waves))
+    eng = Engine(plan, optimizer=opt)
 
-    path = latest_checkpoint(a.ckpt)
-    if path:
-        out, meta = load_checkpoint(path, {"params": params})
-        params = out["params"]
-        print(f"resumed from {path} (wave {meta['step']})")
-
-    tr = WSPTrainer(params, step, opt, num_vw=a.num_vw, D=a.D,
-                    batch=a.batch, seq=a.seq, vocab=cfg.vocab_size,
-                    max_waves=a.waves, ckpt_dir=a.ckpt, ckpt_every=25)
-    rep = tr.run()
+    rep = eng.fit()
     t, loss = rep.loss_curve()
     k = max(4, len(loss) // 20)
     print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
           f"loss {np.mean(loss[:k]):.4f} -> {np.mean(loss[-k:]):.4f}")
     print(f"PS traffic: pushed={rep.bytes_pushed/1e6:.1f}MB "
           f"(one aggregated push per wave — the WSP saving)")
-    print(f"checkpoints in {a.ckpt}: {sorted(os.listdir(a.ckpt))[-3:]}")
+    if os.path.isdir(a.ckpt):
+        print(f"checkpoints in {a.ckpt}: {sorted(os.listdir(a.ckpt))[-3:]}")
+    else:
+        print(f"no checkpoint yet (first one lands at wave 25)")
 
 
 if __name__ == "__main__":

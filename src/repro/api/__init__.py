@@ -1,0 +1,30 @@
+"""repro.api — the declarative experiment layer.
+
+One surface for every training scenario the reproduction supports:
+
+    from repro.api import Plan, ClusterSpec, RunSpec, WSP, Engine
+
+    plan = Plan(arch=my_arch,
+                cluster=ClusterSpec(num_vw=4, topology="hetero"),
+                sync=WSP(D=2, async_push=True),
+                run=RunSpec(max_waves=50))
+    report = Engine(plan).fit()
+
+Plans are frozen and validated at construction; the Engine dispatches to
+the threaded-WSP fleet, the BSP all-reduce loop or the jitted SPMD wave
+path from the Plan alone. `repro.api.presets` names the canonical
+scenarios. The legacy `repro.runtime.trainer.WSPTrainer` and
+`bsp_allreduce_baseline` constructors are deprecation shims over this
+layer.
+"""
+from repro.api.engine import Engine
+from repro.api.plan import ClusterSpec, PartitionSpec, Plan, RunSpec
+from repro.api.presets import PRESETS, get_preset, list_presets
+from repro.api.report import TrainReport
+from repro.api.sync import ASP, BSP, SyncPolicy, UNBOUNDED_D, WSP
+
+__all__ = [
+    "ASP", "BSP", "ClusterSpec", "Engine", "PartitionSpec", "Plan",
+    "PRESETS", "RunSpec", "SyncPolicy", "TrainReport", "UNBOUNDED_D",
+    "WSP", "get_preset", "list_presets",
+]

@@ -1,0 +1,515 @@
+"""The Engine: one facade executing any Plan.
+
+fit() dispatches on the Plan alone:
+
+  backend='threads' + WSP/ASP   threaded virtual-worker fleet against the
+                                sharded parameter server (true async, D >= 0,
+                                stragglers, periodic checkpoint, elastic
+                                fail/rejoin)
+  backend='threads' + BSP       the synchronous AllReduce loop (ring
+                                all-reduce of every wave's deltas, simulated
+                                straggler-gated clock)
+  backend='spmd'                the jitted pipelined wave step over a
+                                (data, stage, tp) mesh (D = 0)
+
+All backends share model materialization, data loaders and TrainReport
+assembly, and step()/save()/restore() complete the surface: single-wave
+stepping for interactive use, atomic checkpointing, exact resume.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.api.plan import Plan
+from repro.api.report import TrainReport
+from repro.api.sync import BSP, WSP
+from repro.core.param_server import ParameterServer
+from repro.data.pipeline import MarkovLM, ShardedLoader
+from repro.dist import collectives
+from repro.dist.topology import make_topology
+from repro.dist.transport import SimulatedTransport
+from repro.runtime.checkpoint import (latest_checkpoint, load_checkpoint,
+                                      save_checkpoint)
+from repro.runtime.virtual_worker import VirtualWorker
+
+
+class Engine:
+    """Executes a Plan. Model artifacts (params / wave step / optimizer) are
+    built from the Plan's ArchConfig by default; tests and the legacy shims
+    may inject prebuilt ones instead."""
+
+    def __init__(self, plan: Plan, *, params=None, wave_step=None,
+                 optimizer=None):
+        if not isinstance(plan, Plan):
+            raise TypeError(f"Engine wants a Plan, got {type(plan).__name__}")
+        if plan.arch is None and (params is None or wave_step is None
+                                  or optimizer is None):
+            raise ValueError("Plan.arch is unset: inject params, wave_step "
+                             "and optimizer, or give the Plan an ArchConfig")
+        self.plan = plan
+        self._params = params
+        self._wave_step = wave_step
+        self._optimizer = optimizer
+        self.ps: Optional[ParameterServer] = None
+        self.topology = None
+        self.workers: dict[str, VirtualWorker] = {}
+        self.stop_event = threading.Event()
+        self.report: Optional[TrainReport] = None
+        self._source = None
+        self._step_ctx = None      # lazy state for step()
+        self._spmd = None          # lazy state for the spmd backend
+        self._step_offset = 0      # waves already in a restored checkpoint
+        self._fleet_ran = False    # the threaded fleet is single-shot
+        self._bsp_wave = 0         # waves the BSP loop has run (this engine)
+
+    # ------------------------------------------------------------------
+    # materialization
+    # ------------------------------------------------------------------
+    def _model_arch(self):
+        """The arch whose parameter shapes this engine trains: the spmd
+        backend re-factors stages/tp from the PartitionSpec (padded layer
+        count can change), the threads backend uses the arch as declared."""
+        if self.plan.run.backend != "spmd":
+            return self.plan.arch
+        import dataclasses as dc
+        plan = self.plan
+        arch = dc.replace(plan.arch, stages=plan.stages, tp=plan.tp)
+        if plan.partition.num_microbatches:
+            arch = dc.replace(
+                arch, num_microbatches=plan.partition.num_microbatches)
+        return arch
+
+    def _ensure_model(self):
+        from repro.core import wave
+        from repro.models import lm
+        from repro.optim import make_optimizer
+        plan, run = self.plan, self.plan.run
+        if self._optimizer is None:
+            self._optimizer = make_optimizer(run.optimizer, run.lr,
+                                             run.weight_decay)
+        if self._params is None:
+            self._params, _ = lm.init_params(self._model_arch(),
+                                             jax.random.PRNGKey(run.seed))
+        if self._wave_step is None and run.backend != "spmd":
+            self._wave_step = wave.build_local_wave_step(
+                plan.arch, plan.num_microbatches, self._optimizer)
+        if self._source is None:
+            self._source = MarkovLM(plan.vocab, seed=run.data_seed)
+
+    def _ensure_ps(self, policy: WSP):
+        if self.ps is not None:
+            return
+        plan = self.plan
+        topo = plan.cluster.topology
+        if isinstance(topo, str):
+            topo = make_topology(topo, plan.cluster.num_vw)
+        self.topology = topo
+        transport = (SimulatedTransport(topo,
+                                        time_scale=plan.cluster.time_scale)
+                     if topo is not None else None)
+        self.ps = ParameterServer(
+            self._params, D=policy.D,
+            compression_ratio=plan.run.compression_ratio,
+            codec=plan.run.codec, transport=transport)
+
+    def _loader(self, i: int, num_vw: int) -> ShardedLoader:
+        run = self.plan.run
+        return ShardedLoader(self._source, run.batch, run.seq, i, num_vw,
+                             seed=17)
+
+    # ------------------------------------------------------------------
+    # public surface
+    # ------------------------------------------------------------------
+    def fit(self, *, rejoin_failed_after: Optional[float] = None,
+            callback: Optional[Callable] = None) -> TrainReport:
+        """Run the Plan to completion and return its TrainReport.
+        `callback(wave, loss, seconds)` is invoked per wave on backends with
+        a central loop (bsp, spmd); the threaded fleet reports at the end."""
+        plan = self.plan
+        if plan.run.resume and plan.run.ckpt_dir:
+            self.restore()
+        if plan.run.backend == "spmd":
+            if rejoin_failed_after is not None:
+                raise ValueError("elastic rejoin is a feature of the "
+                                 "threaded parameter-server fleet; the "
+                                 "jitted spmd backend has no workers to "
+                                 "rejoin")
+            self.report = self._fit_spmd(callback=callback)
+        else:
+            self.report = plan.sync.execute(
+                self, rejoin_failed_after=rejoin_failed_after,
+                callback=callback)
+        return self.report
+
+    def step(self):
+        """One synchronous wave (single-worker semantics on the threads
+        backend, one jitted step on spmd). Returns the wave's loss."""
+        if self.plan.run.backend == "spmd":
+            self._ensure_spmd()
+            return self._spmd_step()
+        policy = self.plan.sync
+        if not isinstance(policy, WSP):
+            raise ValueError(
+                f"step() drives the parameter-server runtime and supports "
+                f"WSP/ASP policies (or the spmd backend); this Plan's "
+                f"{policy.describe()} runs only through fit()")
+        self._ensure_model()
+        self._ensure_ps(policy)
+        if self._step_ctx is None:
+            wid = "vw0"
+            self.ps.register(wid)
+            self._step_ctx = {
+                "wid": wid,
+                "loader": self._loader(0, 1),
+                "opt_state": self._optimizer.init(self.ps.pull()),
+                "params": self.ps.pull(wid),
+            }
+        ctx = self._step_ctx
+        wid = ctx["wid"]
+        if not self.ps.wait_pull_allowed(wid, timeout=120.0):
+            raise TimeoutError(f"{wid}: staleness gate never opened")
+        x, y = ctx["loader"].next()
+        deltas, ctx["opt_state"], loss = self._wave_step(
+            ctx["params"], ctx["opt_state"], x, y)
+        wave = self.ps.push_wave(wid, deltas)
+        # mirror VirtualWorker's weight handling so fit() and step() agree:
+        # local weights see their own wave immediately, w_global is pulled
+        # every pull_every waves
+        if policy.pull_every != 1:
+            ctx["params"] = jax.tree.map(
+                np.add, ctx["params"], jax.tree.map(np.asarray, deltas))
+        if policy.pull_every and wave % policy.pull_every == 0:
+            ctx["params"] = self.ps.pull(wid)
+        return float(loss)
+
+    def save(self, ckpt_dir: Optional[str] = None) -> str:
+        """Checkpoint the full training state atomically (PS weights + WSP
+        clocks are snapshotted under the push lock, so an in-flight async
+        push is either entirely in the checkpoint or entirely out)."""
+        ckpt_dir = ckpt_dir or self.plan.run.ckpt_dir
+        if not ckpt_dir:
+            raise ValueError("no checkpoint directory: set run.ckpt_dir or "
+                             "pass one to save()")
+        if self.ps is not None:
+            params, meta = self.ps.checkpoint_state()
+            step = min(meta["clocks"].values()) if meta["clocks"] else \
+                meta["push_count"]
+            return save_checkpoint(ckpt_dir, self._step_offset + step,
+                                   {"params": params}, meta)
+        if self._spmd is not None:
+            step = self._step_offset + self._spmd["wave"]
+            params = jax.tree.map(np.asarray, self._spmd["params"])
+            return save_checkpoint(ckpt_dir, step, {"params": params},
+                                   {"wave": step})
+        self._ensure_model()
+        step = self._step_offset + self._bsp_wave
+        return save_checkpoint(ckpt_dir, step, {"params": self._params},
+                               {"wave": step})
+
+    def restore(self, path: Optional[str] = None) -> Optional[dict]:
+        """Load the latest (or given) checkpoint's weights into the engine;
+        returns the checkpoint meta, or None if there is nothing to restore.
+        Worker clocks restart at zero (max_waves counts waves of this run),
+        but new checkpoints continue the restored step numbering so a later
+        latest_checkpoint() never resolves to pre-resume state."""
+        path = path or (latest_checkpoint(self.plan.run.ckpt_dir)
+                        if self.plan.run.ckpt_dir else None)
+        if path is None:
+            return None
+        self._ensure_model()
+        out, meta = load_checkpoint(path, {"params": self._params})
+        self._step_offset = int(meta.get("step", 0))
+        self._params = out["params"]
+        if self.ps is not None:
+            leaves = [np.asarray(l).astype(np.float32).ravel()
+                      for l in jax.tree.leaves(self._params)]
+            self.ps.load_state_dict({"flat": leaves,
+                                     "clocks": dict(self.ps.clock.state.clocks),
+                                     "push_count": self.ps.push_count})
+        if self._spmd is not None:
+            # re-place with the mesh sharding (a bare device_put would
+            # commit the whole tree to one device) and drop optimizer
+            # moments computed for the pre-restore weights
+            st = self._spmd
+            st["params"] = self._shard_params(st["mesh"], st["pspecs"],
+                                              self._params)
+            from repro.compat import set_mesh
+            with set_mesh(st["mesh"]):
+                st["opt_state"] = self._optimizer.init(st["params"])
+        return meta
+
+    # ------------------------------------------------------------------
+    # threads backend: WSP / ASP (policy.execute lands here)
+    # ------------------------------------------------------------------
+    def _make_worker(self, i: int, wid: str, policy: WSP) -> VirtualWorker:
+        cl = self.plan.cluster
+        speeds = cl.speeds or (0.0,) * cl.num_vw
+        straggle = cl.straggle_fns or (None,) * cl.num_vw
+        return VirtualWorker(
+            wid, self.ps, self._wave_step, self._loader(i, cl.num_vw),
+            self._optimizer.init(self.ps.pull()),
+            max_waves=self.plan.run.max_waves,
+            pull_every=policy.pull_every,
+            slowdown=speeds[i], straggle_fn=straggle[i],
+            stop_event=self.stop_event,
+            fail_at_wave=cl.fail_map().get(i),
+            async_push=policy.async_push)
+
+    def _fit_threaded(self, policy: WSP, *,
+                      rejoin_failed_after: Optional[float] = None,
+                      callback: Optional[Callable] = None) -> TrainReport:
+        del callback       # per-worker losses are reported at the end
+        if self._fleet_ran:
+            # a fresh fleet would find the PS clocks already at max_waves
+            # and exit with an empty report — fail loudly instead
+            raise RuntimeError(
+                "this Engine's worker fleet already ran; build a new Engine "
+                "(with run.resume=True to continue from a checkpoint)")
+        self._fleet_ran = True
+        self._ensure_model()
+        self._ensure_ps(policy)
+        plan, run = self.plan, self.plan.run
+        num_vw = plan.cluster.num_vw
+        t0 = time.monotonic()
+        # register the whole initial fleet before any worker thread runs:
+        # a late-registering worker would otherwise start at the already-
+        # advanced global clock and silently skip its first waves
+        # (VirtualWorker.run's own register() is then an idempotent no-op,
+        # since this worker's clock-0 entry pins the global minimum)
+        for i in range(num_vw):
+            self.ps.register(f"vw{i}")
+        for i in range(num_vw):
+            wid = f"vw{i}"
+            self.workers[wid] = self._make_worker(i, wid, policy)
+            self.workers[wid].start()
+        ckpt_step = 0
+        rejoined: set[str] = set()
+        periodic = bool(run.ckpt_dir and run.ckpt_every) \
+            or rejoin_failed_after is not None
+        if not periodic:
+            # nothing to supervise: block on the (fixed) worker set directly
+            for w in list(self.workers.values()):
+                w.join()
+        while periodic and any(w.is_alive() for w in self.workers.values()):
+            # wake on wave completion / worker exit rather than busy-polling
+            self.ps.push_event.wait(timeout=0.25)
+            self.ps.push_event.clear()
+            # elastic re-join of failed workers
+            if rejoin_failed_after is not None:
+                for wid, w in list(self.workers.items()):
+                    if (w.failed and not w.is_alive() and wid not in rejoined
+                            and time.monotonic() - t0 > rejoin_failed_after):
+                        rejoined.add(wid)
+                        i = int(wid[2:].rstrip("r"))
+                        if (self.topology is not None
+                                and f"vw{i}" in self.topology.pod_of):
+                            # the re-joined worker lives on the failed one's
+                            # node as far as the network model is concerned
+                            self.topology.add_alias(wid + "r", f"vw{i}")
+                        nw = self._make_worker(i, wid + "r", policy)
+                        nw.fail_at_wave = None
+                        self.workers[wid + "r"] = nw
+                        nw.start()
+            # periodic checkpoint (PS + clocks, snapshotted atomically)
+            if run.ckpt_dir and run.ckpt_every:
+                gc = self.ps.clock.global_clock()
+                if gc >= ckpt_step + run.ckpt_every:
+                    ckpt_step = gc
+                    params, meta = self.ps.checkpoint_state()
+                    save_checkpoint(run.ckpt_dir, self._step_offset + gc,
+                                    {"params": params}, meta)
+        if run.ckpt_dir and run.ckpt_every:
+            # final checkpoint: the loop wakes on push events and may exit
+            # the moment the last worker dies, before the last periodic
+            # write — resume must still see the end-of-run state
+            gc = self.ps.clock.global_clock()
+            if gc > ckpt_step:
+                params, meta = self.ps.checkpoint_state()
+                save_checkpoint(run.ckpt_dir, self._step_offset + gc,
+                                {"params": params}, meta)
+        report = TrainReport()
+        for wid, w in self.workers.items():
+            for t, l in zip(w.metrics.wall_clock, w.metrics.losses):
+                report.losses.append((t, wid, l))
+            report.waves += w.metrics.waves
+            report.overlap_seconds += w.metrics.overlap_seconds
+            report.push_wait_seconds += w.metrics.push_wait_seconds
+        report.wall_s = time.monotonic() - t0
+        report.wait_seconds = dict(self.ps.clock.wait_seconds)
+        report.bytes_pushed = self.ps.bytes_pushed
+        report.bytes_wire = self.ps.bytes_wire
+        report.comm_seconds = self.ps.comm_seconds
+        report.comm = self.ps.transport.stats()
+        return report
+
+    # ------------------------------------------------------------------
+    # threads backend: BSP (policy.execute lands here)
+    # ------------------------------------------------------------------
+    def _fit_bsp(self, policy: BSP, *,
+                 rejoin_failed_after: Optional[float] = None,
+                 callback: Optional[Callable] = None) -> TrainReport:
+        """Synchronous AllReduce DP: every wave, all VWs' deltas are reduced
+        via an emulated ring all-reduce and applied to one global copy.
+
+        Wall clock is a *simulated* straggler-gated time: the VW steps run
+        sequentially on this host, so each wave is charged the max over VWs
+        of (measured compute + simulated slowdown) plus the topology-
+        predicted all-reduce time, and all of a wave's losses share that one
+        timestamp."""
+        if rejoin_failed_after is not None:
+            raise ValueError("elastic rejoin is a parameter-server feature; "
+                             "BSP has no PS to rejoin against")
+        self._ensure_model()
+        plan, run = self.plan, self.plan.run
+        num_vw = plan.cluster.num_vw
+        topo = plan.cluster.topology
+        if isinstance(topo, str):
+            topo = make_topology(topo, num_vw)
+        self.topology = topo
+        names = [f"vw{i}" for i in range(num_vw)]
+        loaders = [self._loader(i, num_vw) for i in range(num_vw)]
+        params = jax.tree.map(np.asarray, self._params)
+        opt_states = [self._optimizer.init(self._params)
+                      for _ in range(num_vw)]
+        speeds = plan.cluster.speeds or (0.0,) * num_vw
+        report = TrainReport()
+        sim_t = 0.0
+        for wave_i in range(run.max_waves):
+            deltas_all, losses = [], []
+            t_wave = 0.0
+            for i in range(num_vw):
+                x, y = loaders[i].next()
+                tw0 = time.monotonic()
+                deltas, opt_states[i], loss = self._wave_step(
+                    params, opt_states[i], x, y)
+                t_wave = max(t_wave, time.monotonic() - tw0 + speeds[i])
+                deltas_all.append(deltas)
+                losses.append(float(loss))
+            mean_delta, coll_s = collectives.ring_allreduce(
+                deltas_all, topology=topo, workers=names,
+                average=policy.average)
+            params = jax.tree.map(np.add, params, mean_delta)
+            nbytes = sum(np.asarray(l).nbytes
+                         for l in jax.tree.leaves(mean_delta))
+            report.bytes_pushed += nbytes * num_vw
+            # ring wire traffic: each VW moves 2(N-1)/N of the vector per wave
+            report.bytes_wire += int(2 * (num_vw - 1) * nbytes) \
+                if num_vw > 1 else 0
+            report.comm_seconds += coll_s
+            sim_t += t_wave + coll_s
+            for i, l in enumerate(losses):
+                report.losses.append((sim_t, f"vw{i}", l))
+            report.waves += num_vw
+            if callback is not None:
+                callback(wave_i, float(np.mean(losses)), t_wave + coll_s)
+            self._params = params
+            self._bsp_wave += 1
+            if run.ckpt_dir and run.ckpt_every and \
+                    ((wave_i + 1) % run.ckpt_every == 0
+                     or wave_i + 1 == run.max_waves):
+                step = self._step_offset + self._bsp_wave
+                save_checkpoint(run.ckpt_dir, step, {"params": params},
+                                {"wave": step})
+        report.wall_s = sim_t
+        self._params = params
+        return report
+
+    # ------------------------------------------------------------------
+    # spmd backend: the jitted pipelined wave step
+    # ------------------------------------------------------------------
+    def _ensure_spmd(self):
+        if self._spmd is not None:
+            return
+        from repro.compat import set_mesh
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.core import wave
+        from repro.launch.mesh import make_mesh_auto
+        from repro.models import lm
+
+        plan, run = self.plan, self.plan.run
+        dsz, ssz, tsz = plan.partition.data, plan.stages, plan.tp
+        needed = dsz * ssz * tsz
+        if len(jax.devices()) < needed:
+            raise RuntimeError(
+                f"the spmd backend needs {needed} devices "
+                f"(data*stages*tp = {dsz}*{ssz}*{tsz}) but jax sees "
+                f"{len(jax.devices())}; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={needed} before "
+                f"jax initializes (launch/train.py --devices does this)")
+        mesh = make_mesh_auto((dsz, ssz, tsz), ("data", "stage", "tp"))
+        self._ensure_model()               # params for the stage-replaced arch
+        arch = self._model_arch()
+        pspecs = lm.param_specs(arch)
+        shape = plan.shape or ShapeConfig("plan", run.seq, run.batch * dsz,
+                                          "train")
+        rc = RunConfig(arch=arch, shape=shape, optimizer=run.optimizer,
+                       lr=run.lr, weight_decay=run.weight_decay,
+                       compute_dtype=run.compute_dtype,
+                       loss_chunk=min(run.loss_chunk, run.seq),
+                       overlap=run.overlap)
+        step, _ = wave.build_train_step(rc, mesh)
+        loader = ShardedLoader(self._source, shape.global_batch, run.seq,
+                               0, 1)
+        p_sh = self._shard_params(mesh, pspecs, self._params)
+        with set_mesh(mesh):
+            opt_state = self._optimizer.init(p_sh)
+        self._spmd = {
+            "mesh": mesh, "arch": arch, "loader": loader, "pspecs": pspecs,
+            "params": p_sh, "opt_state": opt_state,
+            "jstep": jax.jit(step, donate_argnums=(0, 1)), "wave": 0,
+        }
+
+    @staticmethod
+    def _shard_params(mesh, pspecs, params):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
+            return jax.device_put(params, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), pspecs,
+                is_leaf=lambda x: isinstance(x, P)))
+
+    def _spmd_step(self) -> float:
+        import jax.numpy as jnp
+
+        from repro.compat import set_mesh
+        st = self._spmd
+        x, y = st["loader"].next()
+        # the ambient-mesh context is scoped per call rather than held open
+        # for the engine's lifetime, so unrelated jax work in this process
+        # never runs under a stale mesh
+        with set_mesh(st["mesh"]):
+            st["params"], st["opt_state"], m = st["jstep"](
+                st["params"], st["opt_state"],
+                {"inputs": jnp.asarray(x), "labels": jnp.asarray(y)})
+        st["wave"] += 1
+        return float(m["loss"])
+
+    def _fit_spmd(self, *, callback: Optional[Callable] = None
+                  ) -> TrainReport:
+        self._ensure_spmd()
+        run = self.plan.run
+        report = TrainReport()
+        t_start = time.monotonic()
+        for w in range(run.max_waves):
+            t0 = time.monotonic()
+            loss = self._spmd_step()
+            dt = time.monotonic() - t0
+            report.losses.append((time.monotonic() - t_start, "spmd", loss))
+            report.waves += 1
+            if callback is not None:
+                callback(w, loss, dt)
+            if run.ckpt_dir and run.ckpt_every and \
+                    ((w + 1) % run.ckpt_every == 0
+                     or w + 1 == run.max_waves):
+                # the final wave checkpoints even off-cadence: resume must
+                # see the end-of-run state (matches the threads backend)
+                self.save()
+        report.wall_s = time.monotonic() - t_start
+        self._params = jax.tree.map(np.asarray, self._spmd["params"])
+        return report

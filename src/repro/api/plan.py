@@ -1,0 +1,278 @@
+"""Declarative experiment Plans.
+
+A Plan is the single description of a training scenario:
+
+    Plan = ArchConfig x ShapeConfig x ClusterSpec x PartitionSpec
+           x SyncPolicy x RunSpec
+
+It is frozen and validated at construction, so a malformed scenario fails
+where it is written, not three layers down inside a worker thread. The
+Engine (repro.api.engine) is the only consumer: it dispatches to the
+threaded-WSP, BSP-allreduce or jitted-SPMD backend from the Plan alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.api.sync import BSP, SyncPolicy, WSP
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """The fleet: how many virtual workers, on what (modeled) network, with
+    what simulated heterogeneity."""
+
+    num_vw: int = 1
+    # a repro.dist.topology.ClusterTopology, a spec string for
+    # make_topology ('single', '2node:ib', 'hetero', 'paper', ...) or None
+    # for the zero-latency default
+    topology: Any = None
+    speeds: Optional[tuple] = None          # per-VW extra seconds/wave
+    straggle_fns: Optional[tuple] = None    # per-VW wave -> extra seconds
+    fail_at: tuple = ()                     # ((vw_index, wave), ...) failures
+    time_scale: float = 1.0                 # scale modeled delays into sleeps
+
+    def __post_init__(self):
+        if self.speeds is not None:
+            object.__setattr__(self, "speeds", tuple(self.speeds))
+        if self.straggle_fns is not None:
+            object.__setattr__(self, "straggle_fns",
+                               tuple(self.straggle_fns))
+        if isinstance(self.fail_at, dict):
+            object.__setattr__(self, "fail_at",
+                               tuple(sorted(self.fail_at.items())))
+        else:
+            object.__setattr__(self, "fail_at", tuple(self.fail_at))
+
+    def fail_map(self) -> dict:
+        return dict(self.fail_at)
+
+
+@dataclass(frozen=True)
+class PartitionSpec:
+    """Mesh/pipeline factorization. Zeros defer to the ArchConfig."""
+
+    stages: int = 0             # 0 -> arch.stages
+    tp: int = 0                 # 0 -> arch.tp
+    data: int = 1               # SPMD data-parallel mesh size
+    num_microbatches: int = 0   # 0 -> arch.num_microbatches
+    devices: int = 0            # expected device count (0 -> data*stages*tp)
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """Everything about one run that is neither model, fleet nor sync."""
+
+    backend: str = "threads"    # threads (host-level VWs) | spmd (jitted)
+    max_waves: int = 20
+    batch: int = 8              # per-VW wave batch
+    seq: int = 64
+    vocab: int = 0              # 0 -> arch.vocab_size
+    optimizer: str = "sgd"
+    lr: float = 0.3
+    weight_decay: float = 0.1   # only consulted by adamw
+    seed: int = 0               # parameter init seed
+    data_seed: int = 0
+    codec: Optional[str] = None             # 'topk:<r>' | 'int8' | None
+    compression_ratio: Optional[float] = None
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    resume: bool = False
+    overlap: bool = False       # spmd: software-pipelined (skewed) schedule
+    compute_dtype: str = "float32"
+    loss_chunk: int = 512
+
+
+@dataclass(frozen=True)
+class Plan:
+    arch: Optional[ArchConfig] = None
+    shape: Optional[ShapeConfig] = None
+    cluster: ClusterSpec = field(default_factory=ClusterSpec)
+    partition: PartitionSpec = field(default_factory=PartitionSpec)
+    sync: SyncPolicy = field(default_factory=WSP)
+    run: RunSpec = field(default_factory=RunSpec)
+
+    def __post_init__(self):
+        self.validate()
+
+    # ---- resolved views -------------------------------------------------
+    @property
+    def stages(self) -> int:
+        return self.partition.stages or (self.arch.stages if self.arch else 1)
+
+    @property
+    def tp(self) -> int:
+        return self.partition.tp or (self.arch.tp if self.arch else 1)
+
+    @property
+    def num_microbatches(self) -> int:
+        return self.partition.num_microbatches or \
+            (self.arch.num_microbatches if self.arch else 1)
+
+    @property
+    def vocab(self) -> int:
+        return self.run.vocab or (self.arch.vocab_size if self.arch else 256)
+
+    @property
+    def devices_needed(self) -> int:
+        return self.partition.devices or \
+            (self.partition.data * self.stages * self.tp)
+
+    # ---- validation -----------------------------------------------------
+    def validate(self) -> None:
+        from repro.dist.compression import make_codec
+        from repro.dist.topology import make_topology
+
+        if not isinstance(self.sync, SyncPolicy):
+            raise TypeError(f"sync must be a SyncPolicy, got {self.sync!r}")
+        self.sync.validate()
+
+        cl, run = self.cluster, self.run
+        if cl.num_vw < 1:
+            raise ValueError(f"num_vw must be >= 1, got {cl.num_vw}")
+        if cl.speeds is not None and len(cl.speeds) != cl.num_vw:
+            raise ValueError(f"speeds has {len(cl.speeds)} entries for "
+                             f"{cl.num_vw} virtual workers")
+        if cl.straggle_fns is not None and \
+                len(cl.straggle_fns) != cl.num_vw:
+            raise ValueError(f"straggle_fns has {len(cl.straggle_fns)} "
+                             f"entries for {cl.num_vw} virtual workers")
+        if cl.time_scale < 0:
+            raise ValueError(f"time_scale must be >= 0, got {cl.time_scale}")
+        bad = [i for i, _ in cl.fail_at if not 0 <= i < cl.num_vw]
+        if bad:
+            raise ValueError(f"fail_at names worker indices {bad} outside "
+                             f"the fleet (num_vw={cl.num_vw}); that failure "
+                             f"would silently never be injected")
+        if isinstance(cl.topology, str):
+            make_topology(cl.topology, cl.num_vw)   # parse errors surface now
+
+        if run.backend not in ("threads", "spmd"):
+            raise ValueError(f"unknown backend {run.backend!r}; expected "
+                             f"'threads' or 'spmd'")
+        if run.max_waves < 0 or run.batch < 1 or run.seq < 1:
+            raise ValueError(f"bad run spec: max_waves={run.max_waves} "
+                             f"batch={run.batch} seq={run.seq}")
+        if run.codec is not None and run.compression_ratio is not None:
+            raise ValueError("codec and compression_ratio are two spellings "
+                             "of the same knob; set at most one")
+        make_codec(run.codec)                       # parse errors surface now
+        if run.compression_ratio is not None and \
+                not 0.0 < run.compression_ratio <= 1.0:
+            raise ValueError(f"compression_ratio must be in (0, 1], got "
+                             f"{run.compression_ratio}")
+        if run.ckpt_every < 0:
+            raise ValueError(f"ckpt_every must be >= 0, got {run.ckpt_every}")
+
+        if isinstance(self.sync, BSP):
+            # reject knobs the BSP loop would otherwise silently drop
+            if run.codec is not None or run.compression_ratio is not None:
+                raise ValueError(
+                    "gradient codecs ride the parameter-server push path; "
+                    "the BSP loop all-reduces raw deltas — drop "
+                    "codec/compression_ratio or use a WSP policy")
+            if cl.straggle_fns is not None or cl.fail_at:
+                raise ValueError(
+                    "straggle_fns/fail_at simulate per-worker behavior in "
+                    "the threaded PS runtime; the BSP loop models "
+                    "heterogeneity through cluster.speeds only")
+
+        p = self.partition
+        for name in ("stages", "tp", "data", "num_microbatches", "devices"):
+            if getattr(p, name) < 0:
+                raise ValueError(f"partition.{name} must be >= 0")
+        if self.arch is not None or p.num_microbatches:
+            nm = self.num_microbatches
+            if nm >= 1 and run.batch % nm:
+                raise ValueError(
+                    f"per-VW batch {run.batch} is not divisible by "
+                    f"num_microbatches {nm} (the wave packs the batch into "
+                    f"Nm pipeline minibatches)")
+
+        if run.backend == "threads" and (p.stages or p.tp or p.data != 1):
+            raise ValueError(
+                "PartitionSpec.stages/tp/data factor the spmd mesh; the "
+                "threads backend runs each VW's wave step whole (only "
+                "partition.num_microbatches applies) — unset them or use "
+                "backend='spmd'")
+        if run.backend == "spmd":
+            if self.arch is None:
+                raise ValueError("the spmd backend builds the pipelined wave "
+                                 "step from the architecture; Plan.arch is "
+                                 "required")
+            model = self.stages * self.tp
+            if self.devices_needed % model:
+                raise ValueError(
+                    f"stages*tp = {self.stages}*{self.tp} = {model} does not "
+                    f"divide the device count {self.devices_needed}")
+            if p.data * model != self.devices_needed:
+                raise ValueError(
+                    f"mesh data*stages*tp = {p.data}*{self.stages}*{self.tp} "
+                    f"= {p.data * model} != devices {self.devices_needed}")
+            if isinstance(self.sync, WSP):
+                if self.sync.D != 0:
+                    raise ValueError(
+                        "the jitted SPMD backend reduces every wave "
+                        "collectively (D = 0); true-async D > 0 needs "
+                        "backend='threads'")
+                if self.sync.async_push:
+                    raise ValueError("async_push is a threads-backend knob; "
+                                     "spmd overlap is run.overlap (the "
+                                     "skewed pipeline schedule)")
+            elif not isinstance(self.sync, BSP):
+                raise ValueError(f"spmd backend supports WSP(D=0) or BSP, "
+                                 f"got {self.sync.describe()}")
+            if self.shape is not None:
+                if self.shape.kind != "train":
+                    raise ValueError(f"Engine.fit trains; shape kind "
+                                     f"{self.shape.kind!r} is a serving "
+                                     f"shape")
+                if self.shape.seq_len != run.seq or \
+                        self.shape.global_batch != p.data * run.batch:
+                    raise ValueError(
+                        f"shape ({self.shape.global_batch}x"
+                        f"{self.shape.seq_len}) disagrees with "
+                        f"run.batch*data x run.seq ({p.data * run.batch}x"
+                        f"{run.seq}); the loader and the jitted step must "
+                        f"see the same shapes")
+            if run.codec is not None or run.compression_ratio is not None \
+                    or cl.topology is not None:
+                raise ValueError(
+                    "codec/compression_ratio/topology model the host-level "
+                    "PS path; the jitted spmd backend reduces in-graph — "
+                    "unset them or use backend='threads'")
+            if cl.num_vw != 1 or cl.speeds is not None \
+                    or cl.straggle_fns is not None or cl.fail_at:
+                raise ValueError(
+                    "the spmd backend's DP width is partition.data and the "
+                    "mesh is homogeneous; ClusterSpec heterogeneity knobs "
+                    "(num_vw/speeds/straggle_fns/fail_at) only drive the "
+                    "threaded fleet — unset them or use backend='threads'")
+
+    # ---- ergonomics -----------------------------------------------------
+    def replace(self, **kw) -> "Plan":
+        """dataclasses.replace with one level of nesting via double
+        underscores: plan.replace(run__max_waves=8, sync__D=2)."""
+        nested: dict[str, dict] = {}
+        top: dict[str, Any] = {}
+        for k, v in kw.items():
+            if "__" in k:
+                head, rest = k.split("__", 1)
+                nested.setdefault(head, {})[rest] = v
+            else:
+                top[k] = v
+        for head, sub in nested.items():
+            cur = top.get(head, getattr(self, head))
+            top[head] = dataclasses.replace(cur, **sub)
+        return dataclasses.replace(self, **top)
+
+    def describe(self) -> str:
+        arch = self.arch.name if self.arch else "<injected wave step>"
+        topo = self.cluster.topology
+        topo = topo if isinstance(topo, (str, type(None))) else "custom"
+        return (f"Plan({arch}, backend={self.run.backend}, "
+                f"vw={self.cluster.num_vw}, topology={topo}, "
+                f"{self.sync.describe()}, waves={self.run.max_waves})")

@@ -1,0 +1,137 @@
+"""Named experiment presets: one-line access to the canonical scenarios.
+
+    from repro.api import get_preset, Engine
+    report = Engine(get_preset("single_node")).fit()
+
+Every preset is a zero-argument builder returning a validated Plan over a
+tiny CPU-runnable config; scale knobs are overridden through Plan.replace
+(get_preset forwards keyword overrides, double underscores reach nested
+specs: get_preset("paper_hetero", run__max_waves=50, sync__D=4)).
+
+    python -m repro.api.presets                 # list presets
+    python -m repro.api.presets --run NAME      # run one end to end
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.api.engine import Engine
+from repro.api.plan import ClusterSpec, PartitionSpec, Plan, RunSpec
+from repro.api.sync import BSP, WSP
+
+PRESETS: dict[str, Callable[[], Plan]] = {}
+
+
+def preset(name: str):
+    def deco(fn: Callable[[], Plan]):
+        fn.__preset_name__ = name
+        PRESETS[name] = fn
+        return fn
+    return deco
+
+
+def list_presets() -> dict[str, str]:
+    """name -> first docstring line."""
+    return {n: (fn.__doc__ or "").strip().splitlines()[0]
+            for n, fn in PRESETS.items()}
+
+
+def get_preset(name: str, **overrides) -> Plan:
+    if name not in PRESETS:
+        raise KeyError(f"unknown preset {name!r}; known: {sorted(PRESETS)}")
+    plan = PRESETS[name]()
+    return plan.replace(**overrides) if overrides else plan
+
+
+def _tiny_arch(name: str = "qwen3-0.6b", **over):
+    from repro.configs import ARCHS, reduced
+    base = dict(num_layers=2, d_model=32, d_ff=64, vocab_size=256,
+                num_heads=2, num_kv_heads=2, head_dim=16,
+                num_microbatches=2)
+    base.update(over)
+    return reduced(ARCHS[name], **base)
+
+
+@preset("single_node")
+def single_node() -> Plan:
+    """Two virtual workers on one NVLink node, WSP D=1 — the quickstart."""
+    return Plan(arch=_tiny_arch(),
+                cluster=ClusterSpec(num_vw=2, topology="single"),
+                sync=WSP(D=1),
+                run=RunSpec(max_waves=15, batch=8, seq=32))
+
+
+@preset("paper_hetero")
+def paper_hetero() -> Plan:
+    """The paper's 4-node V/R/G/Q fleet: 4 VWs, WSP D=2, async push."""
+    return Plan(arch=_tiny_arch(),
+                cluster=ClusterSpec(num_vw=4, topology="paper"),
+                sync=WSP(D=2, pull_every=2, async_push=True),
+                run=RunSpec(max_waves=12, batch=8, seq=32))
+
+
+@preset("whimpy_1gbe")
+def whimpy_1gbe() -> Plan:
+    """A whimpy heterogeneous pair: NVLink + PCIe nodes over 1 GbE,
+    compressed pushes overlapping the next wave's compute."""
+    from repro.dist.topology import (ClusterTopology, ETH_1G, NVLINK, PCIE,
+                                     Pod)
+    topo = ClusterTopology([Pod("node0", ("vw0",), NVLINK),
+                            Pod("node1", ("vw1",), PCIE)], inter=ETH_1G)
+    return Plan(arch=_tiny_arch(),
+                cluster=ClusterSpec(num_vw=2, topology=topo,
+                                    time_scale=1e-3),
+                sync=WSP(D=2, pull_every=4, async_push=True),
+                run=RunSpec(max_waves=12, batch=8, seq=32,
+                            codec="topk:0.25"))
+
+
+@preset("bsp_baseline")
+def bsp_baseline() -> Plan:
+    """The AllReduce-BSP baseline ("Horovod" analogue) on a 2-node ring."""
+    return Plan(arch=_tiny_arch(),
+                cluster=ClusterSpec(num_vw=2, topology="2node"),
+                sync=BSP(),
+                run=RunSpec(max_waves=12, batch=8, seq=32))
+
+
+@preset("spmd_tiny")
+def spmd_tiny() -> Plan:
+    """The jitted SPMD wave path on a 1x1x1 mesh (runs on a single CPU
+    device; grow data/stages/tp on real meshes)."""
+    return Plan(arch=_tiny_arch(stages=1, tp=1),
+                partition=PartitionSpec(stages=1, tp=1, data=1),
+                sync=WSP(D=0),
+                run=RunSpec(backend="spmd", max_waves=8, batch=8, seq=32))
+
+
+def main(argv=None):
+    import argparse
+
+    import numpy as np
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--run", default=None, metavar="NAME",
+                    help="build the named preset and Engine.fit() it")
+    ap.add_argument("--waves", type=int, default=0,
+                    help="override the preset's max_waves")
+    a = ap.parse_args(argv)
+    if a.run is None:
+        width = max(len(n) for n in PRESETS)
+        for n, doc in list_presets().items():
+            print(f"  {n:<{width}}  {doc}")
+        return 0
+    plan = get_preset(a.run, **({"run__max_waves": a.waves} if a.waves
+                                else {}))
+    print(plan.describe())
+    report = Engine(plan).fit()
+    t, loss = report.loss_curve()
+    print(f"waves={report.waves} wall={report.wall_s:.1f}s "
+          f"loss {loss[0]:.3f} -> {np.mean(loss[-4:]):.3f}")
+    assert np.mean(loss[-4:]) < loss[0], "did not learn"
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Training report returned by every Engine backend.
+
+One report type for the threaded WSP fleet, the BSP all-reduce loop and the
+jitted SPMD path, so downstream analysis (benchmarks, examples, CI asserts)
+never cares which backend produced it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TrainReport:
+    losses: list = field(default_factory=list)      # (wall_s, wid, loss)
+    waves: int = 0
+    wall_s: float = 0.0
+    wait_seconds: dict = field(default_factory=dict)
+    bytes_pushed: int = 0
+    bytes_wire: int = 0
+    comm_seconds: float = 0.0                       # modeled network time
+    overlap_seconds: float = 0.0                    # comm hidden under compute
+    push_wait_seconds: float = 0.0                  # comm NOT hidden (blocked)
+    comm: dict = field(default_factory=dict)        # transport link stats
+
+    def loss_curve(self):
+        """(wall_s, loss) arrays in wall-clock order. Sorts by the timestamp
+        only: full-tuple sorting would fall through to comparing worker ids
+        on wall-clock ties, mis-ordering (or raising, for mixed-type ids)."""
+        pts = sorted(self.losses, key=lambda p: p[0])
+        return (np.array([p[0] for p in pts]),
+                np.array([p[2] for p in pts]))
+
+    def losses_by_worker(self) -> dict:
+        """wid -> loss sequence in push order (deterministic per worker even
+        when wall-clock interleaving across workers is not)."""
+        out: dict = {}
+        for _, wid, loss in self.losses:
+            out.setdefault(wid, []).append(loss)
+        return out

@@ -1,0 +1,81 @@
+"""Synchronization policies — the strategy hierarchy behind Engine.fit().
+
+The paper's three synchronization models are one axis of a Plan:
+
+  WSP(D, pull_every, async_push)  wave synchronous parallel: threaded VWs
+                                  against the sharded parameter server with
+                                  the global staleness bound D (Sections 4-5)
+  BSP()                           the AllReduce baseline ("Horovod" analogue):
+                                  every wave all deltas are ring-all-reduced
+                                  and applied to one global copy
+  ASP(...)                        asynchronous parallel = WSP with an
+                                  unbounded clock distance (D = "infinity")
+
+A policy is pure declarative configuration plus a single `execute(engine)`
+dispatch; the execution loops live in `repro.api.engine` so all policies
+share loaders, timing and report assembly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# "D = infinity" as an int the WSP clock machine can compare against; any
+# realistic wave count is orders of magnitude below it.
+UNBOUNDED_D = 1 << 30
+
+
+@dataclass(frozen=True)
+class SyncPolicy:
+    """Base class: every policy validates itself and knows how to run."""
+
+    @property
+    def kind(self) -> str:
+        return type(self).__name__.lower()
+
+    def validate(self) -> None:
+        pass
+
+    def execute(self, engine, **kw):
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.kind
+
+
+@dataclass(frozen=True)
+class WSP(SyncPolicy):
+    D: int = 0                  # global clock-distance bound (0 = lock step)
+    pull_every: int = 1         # pull w_global every k waves
+    async_push: bool = False    # overlap the wave push with the next compute
+
+    def validate(self) -> None:
+        if not isinstance(self.D, int) or self.D < 0:
+            raise ValueError(f"WSP staleness bound D must be an int >= 0, "
+                             f"got {self.D!r}")
+        if self.pull_every < 1:
+            raise ValueError(f"pull_every must be >= 1, got {self.pull_every}")
+
+    def execute(self, engine, **kw):
+        return engine._fit_threaded(self, **kw)
+
+    def describe(self) -> str:
+        d = "inf" if self.D >= UNBOUNDED_D else self.D
+        return (f"WSP(D={d}, pull_every={self.pull_every}, "
+                f"async_push={self.async_push})")
+
+
+@dataclass(frozen=True)
+class ASP(WSP):
+    """Fully asynchronous parallel: WSP with the staleness gate disabled."""
+    D: int = UNBOUNDED_D
+
+
+@dataclass(frozen=True)
+class BSP(SyncPolicy):
+    """Synchronous AllReduce data parallelism (the paper's Horovod baseline).
+    Wall clock is simulated straggler-gated time: each wave costs the max
+    over VWs of (compute + slowdown) plus the modeled all-reduce."""
+    average: bool = True        # mean the deltas (each VW sees 1/N of batch)
+
+    def execute(self, engine, **kw):
+        return engine._fit_bsp(self, **kw)

@@ -60,6 +60,11 @@ class ParameterServer:
         # layer/leaf round-robin over shards (paper's default placement)
         self.shard_of_leaf = [i % num_shards for i in range(len(leaves))]
         self._locks = [threading.Lock() for _ in range(num_shards)]
+        # serializes the apply+clock-advance of a push against snapshots:
+        # a checkpoint must never capture a clock that counts a push whose
+        # weights it missed (push lost on resume) or the reverse (push
+        # double-applied when the worker redoes the wave)
+        self._snapshot_lock = threading.RLock()
         # per-shard monotone version, bumped on every push that touches the
         # shard; pull() reuses a cached leaf snapshot while versions match
         self._shard_version = [0] * num_shards
@@ -112,7 +117,6 @@ class ParameterServer:
             self.bytes_pushed += dense
             self.bytes_wire += wire
             self.comm_seconds += send.seconds
-            self.push_count += 1
         return PendingPush(wid, updates, send)
 
     def finish_push(self, pending: PendingPush) -> int:
@@ -123,16 +127,20 @@ class ParameterServer:
         by_shard: dict[int, list] = {}
         for upd in pending.updates:
             by_shard.setdefault(self.shard_of_leaf[upd[0]], []).append(upd)
-        for sid, ups in by_shard.items():
-            with self._locks[sid]:
-                for i, idx, vals in ups:
-                    if idx is None:
-                        self.flat[i] += vals
-                    else:
-                        self.flat[i][idx] += vals
-                self._shard_version[sid] += 1
-        pending.applied = True
-        clock = self.clock.complete_wave(pending.wid)
+        with self._snapshot_lock:
+            for sid, ups in by_shard.items():
+                with self._locks[sid]:
+                    for i, idx, vals in ups:
+                        if idx is None:
+                            self.flat[i] += vals
+                        else:
+                            self.flat[i][idx] += vals
+                    self._shard_version[sid] += 1
+            pending.applied = True
+            # counted at apply time (not issue time) so a snapshot's
+            # push_count is exactly the number of pushes its weights contain
+            self.push_count += 1
+            clock = self.clock.complete_wave(pending.wid)
         self.push_event.set()
         return clock
 
@@ -184,11 +192,22 @@ class ParameterServer:
 
     # -- checkpointing ----------------------------------------------------
     def state_dict(self):
-        return {
-            "flat": [f.copy() for f in self.flat],
-            "clocks": dict(self.clock.state.clocks),
-            "push_count": self.push_count,
-        }
+        with self._snapshot_lock:
+            return {
+                "flat": [f.copy() for f in self.flat],
+                "clocks": dict(self.clock.state.clocks),
+                "push_count": self.push_count,
+            }
+
+    def checkpoint_state(self):
+        """(params_tree, meta) snapshotted atomically with respect to pushes:
+        the weights include exactly the waves the clocks count, so a resume
+        neither loses nor double-applies an in-flight async push."""
+        with self._snapshot_lock:
+            params = self.pull()
+            meta = {"clocks": dict(self.clock.state.clocks),
+                    "push_count": self.push_count}
+        return params, meta
 
     def load_state_dict(self, sd):
         for i, f in enumerate(sd["flat"]):

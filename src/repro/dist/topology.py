@@ -205,14 +205,37 @@ def _split_contiguous(num_vw: int, parts: int) -> list[tuple[str, ...]]:
             for chunk in np.array_split(np.arange(num_vw), parts)]
 
 
+# spec -> one-line description; the parseable grammar for make_topology and
+# the source of truth for `--topology list` in the CLI.
+TOPOLOGY_SPECS: dict[str, str] = {
+    "none":            "no network model (zero-latency default; "
+                       "aliases: '', 'zero', 'off')",
+    "single":          "one NVLink pod holding every virtual worker",
+    "<k>node[:LINK]":  "k NVLink pods joined by LINK: 'eth' (10 GbE, "
+                       "default), 'eth1' (whimpy 1 GbE) or 'ib' (100G IB) "
+                       "— e.g. '2node', '4node:ib', '2node:eth1'",
+    "hetero[-2node]":  "an NVLink pod + a PCIe pod over 10 GbE",
+    "paper":           "the paper's 4-node V/R/G/Q fleet (Table 1), intra "
+                       "links from the device profiles",
+}
+
+_INTER_LINKS = {"": ETH_10G, "eth": ETH_10G, "eth10": ETH_10G,
+                "eth1": ETH_1G, "ib": IB_100G}
+
+
+def topology_help() -> str:
+    """Human-readable listing of every accepted --topology spec."""
+    width = max(len(k) for k in TOPOLOGY_SPECS)
+    return "\n".join(f"  {k:<{width}}  {v}"
+                     for k, v in TOPOLOGY_SPECS.items())
+
+
 def make_topology(spec: str | None, num_vw: int) -> ClusterTopology | None:
     """Parse a CLI/topology spec into a ClusterTopology over vw0..vw{N-1}.
 
-      None | 'none' | 'zero'   — no network model (zero-latency default)
-      'single'                 — one NVLink pod
-      '<k>node[:ib]'           — k NVLink pods over 10G Ethernet (or 100G IB)
-      'hetero' | 'hetero-2node'— NVLink pod + PCIe pod over 10G Ethernet
-      'paper'                  — the paper's 4-node V/R/G/Q fleet (Table 1)
+    See TOPOLOGY_SPECS / topology_help() for the grammar. Unknown or
+    malformed specs raise ValueError with the full listing rather than
+    failing deep inside parsing.
     """
     if spec is None:
         return None
@@ -233,11 +256,25 @@ def make_topology(spec: str | None, num_vw: int) -> ClusterTopology | None:
             [Node(PAPER_GPUS[c], 4) for c in "VRGQ"], num_vw=num_vw)
     if s.endswith("node") or ":" in s:
         base, _, linkname = s.partition(":")
-        inter = {"": ETH_10G, "eth": ETH_10G, "ib": IB_100G}[linkname]
-        k = int(base.removesuffix("node"))
-        assert k >= 1, spec
+        if linkname not in _INTER_LINKS:
+            raise ValueError(
+                f"unknown inter-node link {linkname!r} in topology spec "
+                f"{spec!r}; expected one of "
+                f"{sorted(k for k in _INTER_LINKS if k)}")
+        inter = _INTER_LINKS[linkname]
+        try:
+            k = int(base.removesuffix("node"))
+        except ValueError:
+            raise ValueError(
+                f"malformed topology spec {spec!r}: expected '<k>node' with "
+                f"integer k, got {base!r}. Known specs:\n"
+                + topology_help()) from None
+        if k < 1:
+            raise ValueError(
+                f"topology spec {spec!r} needs at least one node (k >= 1)")
         groups = _split_contiguous(num_vw, min(k, num_vw))
         pods = [Pod(f"node{j}", g, NVLINK)
                 for j, g in enumerate(groups) if g]
         return ClusterTopology(pods, inter=inter)
-    raise ValueError(f"unknown topology spec: {spec!r}")
+    raise ValueError(f"unknown topology spec {spec!r}. Known specs:\n"
+                     + topology_help())

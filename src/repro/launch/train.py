@@ -1,6 +1,7 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin CLI over the repro.api layer.
 
-Two modes:
+Both modes build a declarative `repro.api.Plan` and run it through the same
+`Engine`:
   --mode spmd    one jitted pipelined wave step over a (data, stage, tp) mesh
                  (WSP D=0; the production path — on CPU use a small mesh via
                  --devices, which must be set before jax initializes, so this
@@ -15,13 +16,11 @@ Example (CPU, reduced model, a few hundred steps):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
-import time
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--mode", choices=("spmd", "wsp"), default="wsp")
@@ -42,8 +41,8 @@ def main():
     ap.add_argument("--codec", default=None,
                     help="gradient codec: topk:<ratio> | int8 | none")
     ap.add_argument("--topology", default=None,
-                    help="network model: single | <k>node[:ib] | "
-                         "hetero-2node | paper (default: zero-latency)")
+                    help="network model spec, or 'list' to print every "
+                         "accepted spec and exit (default: zero-latency)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="scale modeled network delays before sleeping")
     ap.add_argument("--overlap", action="store_true",
@@ -62,21 +61,33 @@ def main():
                     help="spmd mode: fake host device count (data*stage*tp)")
     ap.add_argument("--mesh", default="2,2,2",
                     help="spmd mode: data,stage,tp")
-    a = ap.parse_args()
+    return ap
 
-    if a.mode == "spmd" and a.devices and "XLA_FLAGS" not in os.environ:
+
+def main(argv=None):
+    a = build_parser().parse_args(argv)
+
+    if a.topology == "list":
+        from repro.dist.topology import topology_help
+        print("accepted --topology specs:")
+        print(topology_help())
+        return
+
+    # the re-exec trick only makes sense for a real CLI invocation: sys.argv
+    # is this process's own command line. A programmatic caller passing argv
+    # must set XLA_FLAGS itself (the Engine's device check says how).
+    if a.mode == "spmd" and a.devices and argv is None \
+            and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = \
             f"--xla_force_host_platform_device_count={a.devices}"
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
-    from repro.configs import ARCHS, reduced as make_reduced, RunConfig, \
-        ShapeConfig
-    from repro.models import lm
-    from repro.optim import make_optimizer
-    from repro.core import wave
+
+    from repro.api import ClusterSpec, Engine, PartitionSpec, Plan, \
+        RunSpec, WSP
+    from repro.configs import ARCHS, reduced as make_reduced
 
     cfg = ARCHS[a.arch]
     if a.reduced:
@@ -87,37 +98,28 @@ def main():
                            num_heads=heads,
                            num_kv_heads=max(1, heads // 2) if heads else 0,
                            head_dim=dm // heads if heads else 0)
-    params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
-    opt = make_optimizer(a.optimizer, a.lr)
-    print(f"arch={cfg.name} params={sum(np.size(x) for x in jax.tree.leaves(params)):,}")
+    print(f"arch={cfg.name} params={cfg.param_count():,} (analytic)")
 
     if a.mode == "wsp":
-        from repro.runtime.trainer import WSPTrainer
         if a.overlap and a.pull_every == 1:
             print("note: --overlap with --pull-every 1 serializes every push "
                   "behind the following pull (each wave starts from freshly "
                   "pulled weights); use --pull-every > 1 to actually hide "
                   "push latency", file=sys.stderr)
-        from repro.runtime.checkpoint import latest_checkpoint, \
-            load_checkpoint
-        step = wave.build_local_wave_step(cfg, cfg.num_microbatches, opt)
-        if a.resume and a.ckpt_dir:
-            path = latest_checkpoint(a.ckpt_dir)
-            if path:
-                out, meta = load_checkpoint(path, {"params": params})
-                params = out["params"]
-                print(f"resumed from {path} (step {meta['step']})")
         speeds = ([float(s) for s in a.speeds.split(",")]
                   if a.speeds else None)
-        tr = WSPTrainer(params, step, opt, num_vw=a.num_vw, D=a.D,
-                        batch=a.batch, seq=a.seq, vocab=cfg.vocab_size,
-                        max_waves=a.waves, speeds=speeds,
-                        compression_ratio=a.compression,
-                        codec=a.codec, topology=a.topology,
-                        time_scale=a.time_scale,
-                        pull_every=a.pull_every, async_push=a.overlap,
-                        ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every)
-        rep = tr.run()
+        plan = Plan(
+            arch=cfg,
+            cluster=ClusterSpec(num_vw=a.num_vw, topology=a.topology,
+                                speeds=speeds, time_scale=a.time_scale),
+            sync=WSP(D=a.D, pull_every=a.pull_every, async_push=a.overlap),
+            run=RunSpec(max_waves=a.waves, batch=a.batch, seq=a.seq,
+                        optimizer=a.optimizer, lr=a.lr,
+                        compression_ratio=a.compression, codec=a.codec,
+                        ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
+                        resume=a.resume))
+        eng = Engine(plan)
+        rep = eng.fit()
         xs, ys = rep.loss_curve()
         print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
               f"first_loss={ys[0]:.4f} last_loss={np.mean(ys[-5:]):.4f}")
@@ -126,7 +128,7 @@ def main():
                   f"blocked={rep.push_wait_seconds:.2f}s")
         print(f"pushed={rep.bytes_pushed/1e6:.1f}MB wire="
               f"{rep.bytes_wire/1e6:.1f}MB waits={ {k: round(v,2) for k, v in rep.wait_seconds.items()} }")
-        if tr.topology is not None:
+        if eng.topology is not None:
             by_link = rep.comm.get("bytes_by_link", {})
             print(f"network: modeled={rep.comm_seconds:.2f}s "
                   f"bytes_by_link={ {k: f'{v/1e6:.1f}MB' for k, v in by_link.items()} }")
@@ -136,37 +138,25 @@ def main():
     if a.topology or a.codec or a.compression:
         print("warning: --topology/--codec/--compression only apply to "
               "--mode wsp; ignored in spmd mode", file=sys.stderr)
-    from jax.sharding import NamedSharding, PartitionSpec as P
     dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
-    from repro.launch.mesh import make_mesh_auto
-    mesh = make_mesh_auto((dsz, ssz, tsz), ("data", "stage", "tp"))
-    import dataclasses
-    cfg = dataclasses.replace(cfg, stages=ssz, tp=tsz)
-    params, pspecs = lm.init_params(cfg, jax.random.PRNGKey(0))
-    shape = ShapeConfig("cli", a.seq, a.batch * dsz, "train")
-    run = RunConfig(arch=cfg, shape=shape, optimizer=a.optimizer, lr=a.lr,
-                    compute_dtype="float32", loss_chunk=min(512, a.seq),
-                    overlap=a.overlap)
-    step, _ = wave.build_train_step(run, mesh)
-    from repro.data.pipeline import MarkovLM, ShardedLoader
-    loader = ShardedLoader(MarkovLM(cfg.vocab_size), shape.global_batch,
-                           a.seq, 0, 1)
-    from repro.compat import set_mesh
-    with set_mesh(mesh):
-        p_sh = jax.device_put(params, jax.tree.map(
-            lambda s: NamedSharding(mesh, s), pspecs,
-            is_leaf=lambda x: isinstance(x, P)))
-        opt_state = opt.init(p_sh)
-        jstep = jax.jit(step, donate_argnums=(0, 1))
-        for w in range(a.waves):
-            x, y = loader.next()
-            t0 = time.time()
-            p_sh, opt_state, m = jstep(p_sh, opt_state,
-                                       {"inputs": jnp.asarray(x),
-                                        "labels": jnp.asarray(y)})
-            if w % 5 == 0 or w == a.waves - 1:
-                print(f"wave {w:4d} loss={float(m['loss']):.4f} "
-                      f"({time.time()-t0:.2f}s)")
+    plan = Plan(
+        arch=cfg,
+        partition=PartitionSpec(data=dsz, stages=ssz, tp=tsz),
+        sync=WSP(D=0),
+        run=RunSpec(backend="spmd", max_waves=a.waves, batch=a.batch,
+                    seq=a.seq, optimizer=a.optimizer, lr=a.lr,
+                    overlap=a.overlap, resume=a.resume,
+                    ckpt_dir=a.ckpt_dir,
+                    ckpt_every=a.ckpt_every if a.ckpt_dir else 0))
+    eng = Engine(plan)
+    n_dev = len(jax.devices())
+    print(f"mesh=({dsz},{ssz},{tsz}) devices={n_dev}")
+
+    def log(w, loss, dt):
+        if w % 5 == 0 or w == a.waves - 1:
+            print(f"wave {w:4d} loss={loss:.4f} ({dt:.2f}s)")
+
+    eng.fit(callback=log)
 
 
 if __name__ == "__main__":

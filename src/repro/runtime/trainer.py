@@ -1,53 +1,45 @@
-"""Multi-virtual-worker WSP trainer: the host-level HetPipe runtime.
+"""Deprecated constructors kept for source compatibility.
 
-Spawns N VirtualWorker threads against a sharded ParameterServer, with
-simulated heterogeneous speeds / stragglers, periodic checkpointing, elastic
-worker removal & re-join, and an AllReduce-BSP baseline ("Horovod" analogue)
-for the paper's comparison experiments.
+The host-level WSP runtime now lives behind the declarative experiment layer
+(`repro.api`): describe a scenario with a `Plan` and run it with `Engine`.
+`WSPTrainer` and `bsp_allreduce_baseline` survive only as thin shims that
+build a Plan internally — new code should construct the Plan directly:
+
+    from repro.api import Plan, ClusterSpec, RunSpec, WSP, BSP, Engine
+
+    report = Engine(Plan(arch=cfg,
+                         cluster=ClusterSpec(num_vw=4, topology="hetero"),
+                         sync=WSP(D=2, async_push=True),
+                         run=RunSpec(max_waves=50))).fit()
+
+See the README's "Experiment API" migration table for the kwarg mapping.
 """
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
+import warnings
 from typing import Callable, Optional
 
-import jax
-import numpy as np
-
-from repro.core.param_server import ParameterServer
-from repro.data.pipeline import MarkovLM, ShardedLoader
-from repro.dist import collectives
-from repro.dist.topology import ClusterTopology, make_topology
-from repro.dist.transport import SimulatedTransport
-from repro.runtime.checkpoint import save_checkpoint, load_checkpoint
-from repro.runtime.virtual_worker import VirtualWorker
+from repro.api.engine import Engine
+from repro.api.plan import ClusterSpec, Plan, RunSpec
+from repro.api.report import TrainReport                       # noqa: F401
+from repro.api.sync import BSP, WSP
+from repro.dist.topology import ClusterTopology
 
 
-@dataclass
-class TrainReport:
-    losses: list = field(default_factory=list)      # (wall_s, wid, loss)
-    waves: int = 0
-    wall_s: float = 0.0
-    wait_seconds: dict = field(default_factory=dict)
-    bytes_pushed: int = 0
-    bytes_wire: int = 0
-    comm_seconds: float = 0.0                       # modeled network time
-    overlap_seconds: float = 0.0                    # comm hidden under compute
-    push_wait_seconds: float = 0.0                  # comm NOT hidden (blocked)
-    comm: dict = field(default_factory=dict)        # transport link stats
-
-    def loss_curve(self):
-        pts = sorted(self.losses)
-        return (np.array([p[0] for p in pts]),
-                np.array([p[2] for p in pts]))
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"{old} is deprecated; build a repro.api.Plan and use {new} instead "
+        f"(see README 'Experiment API')",
+        DeprecationWarning, stacklevel=3)
 
 
 class WSPTrainer:
+    """Deprecated: shim over repro.api.Engine with a WSP SyncPolicy."""
+
     def __init__(self, init_params, wave_step: Callable, optimizer, *,
                  num_vw: int, D: int = 0, batch: int = 8, seq: int = 64,
                  vocab: int = 256, max_waves: int = 20,
-                 speeds: Optional[list[float]] = None,
+                 speeds: Optional[list] = None,
                  straggle_fns: Optional[list] = None,
                  compression_ratio: Optional[float] = None,
                  codec=None,
@@ -57,150 +49,56 @@ class WSPTrainer:
                  fail_at: Optional[dict[int, int]] = None,
                  data_seed: int = 0, pull_every: int = 1,
                  async_push: bool = False):
-        if isinstance(topology, str):
-            topology = make_topology(topology, num_vw)
-        self.topology = topology
-        transport = (SimulatedTransport(topology, time_scale=time_scale)
-                     if topology is not None else None)
-        self.ps = ParameterServer(init_params, D=D,
-                                  compression_ratio=compression_ratio,
-                                  codec=codec, transport=transport)
-        self.wave_step, self.optimizer = wave_step, optimizer
-        self.num_vw, self.max_waves = num_vw, max_waves
-        self.batch, self.seq = batch, seq
-        self.speeds = speeds or [0.0] * num_vw
-        self.straggle_fns = straggle_fns or [None] * num_vw
-        self.source = MarkovLM(vocab, seed=data_seed)
-        self.ckpt_dir, self.ckpt_every = ckpt_dir, ckpt_every
-        self.fail_at = fail_at or {}
-        self.pull_every = pull_every
-        self.async_push = async_push
-        self.stop_event = threading.Event()
-        self.workers: dict[str, VirtualWorker] = {}
+        _deprecated("WSPTrainer", "Engine(plan).fit()")
+        plan = Plan(
+            cluster=ClusterSpec(num_vw=num_vw, topology=topology,
+                                speeds=speeds, straggle_fns=straggle_fns,
+                                fail_at=fail_at or {},
+                                time_scale=time_scale),
+            sync=WSP(D=D, pull_every=pull_every, async_push=async_push),
+            run=RunSpec(max_waves=max_waves, batch=batch, seq=seq,
+                        vocab=vocab, codec=codec,
+                        compression_ratio=compression_ratio,
+                        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                        data_seed=data_seed))
+        self.engine = Engine(plan, params=init_params, wave_step=wave_step,
+                             optimizer=optimizer)
+        # eager build, matching the old constructor's observable surface
+        self.engine._ensure_model()
+        self.engine._ensure_ps(plan.sync)
 
-    def _make_worker(self, i: int, wid: str) -> VirtualWorker:
-        loader = ShardedLoader(self.source, self.batch, self.seq, i,
-                               self.num_vw, seed=17)
-        return VirtualWorker(
-            wid, self.ps, self.wave_step, loader,
-            self.optimizer.init(self.ps.pull()),
-            max_waves=self.max_waves, pull_every=self.pull_every,
-            slowdown=self.speeds[i],
-            straggle_fn=self.straggle_fns[i],
-            stop_event=self.stop_event,
-            fail_at_wave=self.fail_at.get(i),
-            async_push=self.async_push)
+    @property
+    def ps(self):
+        return self.engine.ps
+
+    @property
+    def workers(self):
+        return self.engine.workers
+
+    @property
+    def topology(self):
+        return self.engine.topology
+
+    @property
+    def stop_event(self):
+        return self.engine.stop_event
 
     def run(self, *, rejoin_failed_after: Optional[float] = None
             ) -> TrainReport:
-        t0 = time.monotonic()
-        for i in range(self.num_vw):
-            wid = f"vw{i}"
-            self.workers[wid] = self._make_worker(i, wid)
-            self.workers[wid].start()
-        ckpt_step = 0
-        rejoined = set()
-        periodic = bool(self.ckpt_dir and self.ckpt_every) \
-            or rejoin_failed_after is not None
-        if not periodic:
-            # nothing to supervise: block on the (fixed) worker set directly
-            for w in list(self.workers.values()):
-                w.join()
-        while periodic and any(w.is_alive() for w in self.workers.values()):
-            # wake on wave completion / worker exit rather than busy-polling
-            self.ps.push_event.wait(timeout=0.25)
-            self.ps.push_event.clear()
-            # elastic re-join of failed workers
-            if rejoin_failed_after is not None:
-                for wid, w in list(self.workers.items()):
-                    if (w.failed and not w.is_alive() and wid not in rejoined
-                            and time.monotonic() - t0 > rejoin_failed_after):
-                        rejoined.add(wid)
-                        i = int(wid[2:])
-                        if (self.topology is not None
-                                and f"vw{i}" in self.topology.pod_of):
-                            # the re-joined worker lives on the failed one's
-                            # node as far as the network model is concerned
-                            self.topology.add_alias(wid + "r", f"vw{i}")
-                        nw = self._make_worker(i, wid + "r")
-                        nw.fail_at_wave = None
-                        self.workers[wid + "r"] = nw
-                        nw.start()
-            # periodic checkpoint (PS + clocks)
-            if self.ckpt_dir and self.ckpt_every:
-                gc = self.ps.clock.global_clock()
-                if gc >= ckpt_step + self.ckpt_every:
-                    ckpt_step = gc
-                    save_checkpoint(
-                        self.ckpt_dir, gc,
-                        {"params": self.ps.pull()},
-                        {"clocks": dict(self.ps.clock.state.clocks),
-                         "push_count": self.ps.push_count})
-        report = TrainReport()
-        for wid, w in self.workers.items():
-            for t, l in zip(w.metrics.wall_clock, w.metrics.losses):
-                report.losses.append((t, wid, l))
-            report.waves += w.metrics.waves
-            report.overlap_seconds += w.metrics.overlap_seconds
-            report.push_wait_seconds += w.metrics.push_wait_seconds
-        report.wall_s = time.monotonic() - t0
-        report.wait_seconds = dict(self.ps.clock.wait_seconds)
-        report.bytes_pushed = self.ps.bytes_pushed
-        report.bytes_wire = self.ps.bytes_wire
-        report.comm_seconds = self.ps.comm_seconds
-        report.comm = self.ps.transport.stats()
-        return report
+        return self.engine.fit(rejoin_failed_after=rejoin_failed_after)
 
 
 def bsp_allreduce_baseline(init_params, wave_step, optimizer, *, num_vw: int,
                            batch: int, seq: int, vocab: int, max_waves: int,
-                           speeds: Optional[list[float]] = None,
+                           speeds: Optional[list] = None,
                            topology: ClusterTopology | str | None = None,
                            data_seed: int = 0) -> TrainReport:
-    """Synchronous AllReduce DP (the paper's Horovod baseline): every wave,
-    all VWs' deltas are reduced via an emulated ring all-reduce (averaged —
-    each VW sees 1/N of the batch) and applied to one global copy.
-
-    Wall clock is a *simulated* straggler-gated time: the VW steps actually
-    run sequentially on this host, so each wave is charged the max over VWs
-    of (measured compute + simulated slowdown) plus the topology-predicted
-    all-reduce time, and all of a wave's losses share that one timestamp.
-    """
-    if isinstance(topology, str):
-        topology = make_topology(topology, num_vw)
-    names = [f"vw{i}" for i in range(num_vw)]
-    source = MarkovLM(vocab, seed=data_seed)
-    loaders = [ShardedLoader(source, batch, seq, i, num_vw, seed=17)
-               for i in range(num_vw)]
-    params = jax.tree.map(np.asarray, init_params)
-    opt_states = [optimizer.init(init_params) for _ in range(num_vw)]
-    speeds = speeds or [0.0] * num_vw
-    report = TrainReport()
-    sim_t = 0.0
-    for wave in range(max_waves):
-        deltas_all, losses = [], []
-        t_wave = 0.0
-        for i in range(num_vw):
-            x, y = loaders[i].next()
-            tw0 = time.monotonic()
-            deltas, opt_states[i], loss = wave_step(params, opt_states[i],
-                                                    x, y)
-            t_wave = max(t_wave, time.monotonic() - tw0 + speeds[i])
-            deltas_all.append(deltas)
-            losses.append(float(loss))
-        mean_delta, coll_s = collectives.ring_allreduce(
-            deltas_all, topology=topology, workers=names, average=True)
-        params = jax.tree.map(np.add, params, mean_delta)
-        nbytes = sum(np.asarray(l).nbytes
-                     for l in jax.tree.leaves(mean_delta))
-        report.bytes_pushed += nbytes * num_vw
-        # ring wire traffic: each VW moves 2(N-1)/N of the vector per wave
-        report.bytes_wire += int(2 * (num_vw - 1) * nbytes) \
-            if num_vw > 1 else 0
-        report.comm_seconds += coll_s
-        sim_t += t_wave + coll_s
-        for i, l in enumerate(losses):
-            report.losses.append((sim_t, f"vw{i}", l))
-        report.waves += num_vw
-    report.wall_s = sim_t
-    return report
+    """Deprecated: shim over repro.api.Engine with the BSP SyncPolicy."""
+    _deprecated("bsp_allreduce_baseline", "Engine(plan with sync=BSP()).fit()")
+    plan = Plan(
+        cluster=ClusterSpec(num_vw=num_vw, topology=topology, speeds=speeds),
+        sync=BSP(),
+        run=RunSpec(max_waves=max_waves, batch=batch, seq=seq, vocab=vocab,
+                    data_seed=data_seed))
+    return Engine(plan, params=init_params, wave_step=wave_step,
+                  optimizer=optimizer).fit()
