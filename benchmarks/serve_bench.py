@@ -1,0 +1,112 @@
+"""Serving benchmark — the BENCH_serve.json baseline.
+
+Measures, per architecture (reduced CPU configs; relative numbers are the
+point, the file is a trajectory anchor per the ROADMAP):
+
+  - prefill_ms: one batched prefill call (warm jit)
+  - ms_per_token: batched greedy decode through Engine.generate()
+  - batched vs sequential throughput: the same requests pushed through the
+    continuous-batching Scheduler with max_batch slots vs one at a time
+    (batch-of-1 Plan) — the speedup continuous batching buys
+
+  PYTHONPATH=src python benchmarks/serve_bench.py           # full sweep
+  PYTHONPATH=src python benchmarks/serve_bench.py --tiny    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "BENCH_serve.json")
+
+
+def bench_arch(name: str, *, prompt_len: int, gen: int, max_batch: int,
+               n_req: int):
+    import numpy as np
+
+    from repro.api import Engine, Plan, ServeSpec
+    from repro.api.serving import Request, Scheduler
+    from repro.configs import ARCHS, reduced
+
+    cfg = reduced(ARCHS[name])
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (max_batch, prompt_len),
+                           dtype=np.int32)
+
+    plan = Plan(arch=cfg, serve=ServeSpec(prompt_len=prompt_len, gen=gen,
+                                          max_batch=max_batch))
+    eng = Engine(plan)
+    eng.generate(prompts)                        # warm the jit caches
+    rep = eng.generate(prompts)                  # measured
+
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                        dtype=np.int32))
+            for i in range(n_req)]
+
+    def timed_run(engine, request_batches):
+        Scheduler(engine).run([r for b in request_batches for r in b])
+        t0 = time.monotonic()
+        toks = 0
+        for batch in request_batches:
+            out = Scheduler(engine).run(list(batch))
+            toks += out.tokens_out
+        return toks, time.monotonic() - t0, out
+
+    b_toks, b_s, b_out = timed_run(eng, [reqs])
+    one = Engine(plan.replace(serve__max_batch=1))
+    s_toks, s_s, _ = timed_run(one, [[r] for r in reqs])
+    assert b_toks == s_toks == n_req * gen, (b_toks, s_toks)
+
+    return {
+        "arch": cfg.name,
+        "prompt_len": prompt_len, "gen": gen, "max_batch": max_batch,
+        "requests": n_req,
+        "prefill_ms": rep.prefill_s * 1e3,
+        "ms_per_token": rep.ms_per_token(),
+        "batched": {"tokens": b_toks, "wall_s": b_s,
+                    "tokens_per_s": b_toks / b_s,
+                    "occupancy": b_out.occupancy()},
+        "sequential": {"tokens": s_toks, "wall_s": s_s,
+                       "tokens_per_s": s_toks / s_s},
+        "batched_vs_sequential_speedup": s_s / b_s,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: one arch, short generations")
+    ap.add_argument("--out", default=OUT)
+    a = ap.parse_args(argv)
+
+    if a.tiny:
+        cells = [("qwen3-0.6b", dict(prompt_len=8, gen=8, max_batch=4,
+                                     n_req=8))]
+    else:
+        cells = [(n, dict(prompt_len=24, gen=16, max_batch=4, n_req=8))
+                 for n in ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b")]
+
+    doc = {"meta": {"mode": "tiny" if a.tiny else "full",
+                    "backend": "threads",
+                    "note": "reduced CPU configs; trajectory anchor, not "
+                            "absolute hardware numbers"},
+           "runtime": []}
+    for name, kw in cells:
+        cell = bench_arch(name, **kw)
+        doc["runtime"].append(cell)
+        print(f"{cell['arch']}: prefill={cell['prefill_ms']:.1f}ms "
+              f"decode={cell['ms_per_token']:.1f}ms/tok "
+              f"batched={cell['batched']['tokens_per_s']:.1f}tok/s "
+              f"sequential={cell['sequential']['tokens_per_s']:.1f}tok/s "
+              f"speedup={cell['batched_vs_sequential_speedup']:.2f}x")
+    with open(a.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Batched serving example: prefill a batch of prompts, then decode
 autoregressively with KV/SSM caches — across three architecture families
-(dense GQA, sliding-window, attention-free RWKV6).
+(dense GQA, sliding-window, attention-free RWKV6), all routed through the
+repro.api serve surface (Plan + Engine.generate()), plus one
+continuous-batching run through the request scheduler.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,16 +11,25 @@ import sys
 import os
 
 HERE = os.path.dirname(os.path.abspath(__file__))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(HERE, "..", "src")}
 
-for arch in ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b"):
+
+def run(extra):
     r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
-         "--batch", "4", "--prompt-len", "24", "--gen", "12"],
-        env={**os.environ,
-             "PYTHONPATH": os.path.join(HERE, "..", "src")},
-        capture_output=True, text=True, timeout=900)
+        [sys.executable, "-m", "repro.launch.serve"] + extra,
+        env=ENV, capture_output=True, text=True, timeout=900)
     sys.stdout.write(r.stdout)
     if r.returncode:
         sys.stderr.write(r.stderr[-2000:])
-        raise SystemExit(f"{arch} failed")
+        raise SystemExit(f"{extra} failed")
+
+
+# aligned-batch generate() on each family
+for arch in ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b"):
+    run(["--arch", arch, "--batch", "4", "--prompt-len", "24",
+         "--gen", "12"])
+
+# continuous batching: 6 requests through 2 decode slots
+run(["--arch", "qwen3-0.6b", "--requests", "6", "--batch", "2",
+     "--prompt-len", "16", "--gen", "8"])
 print("OK")

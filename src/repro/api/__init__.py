@@ -16,15 +16,24 @@ path from the Plan alone. `repro.api.presets` names the canonical
 scenarios. The legacy `repro.runtime.trainer.WSPTrainer` and
 `bsp_allreduce_baseline` constructors are deprecation shims over this
 layer.
+
+Serving rides the same surface: a Plan with `serve=ServeSpec(...)` runs
+batched prefill + autoregressive decode through
+`Engine.prefill()/decode()/generate()` (pipelined mesh steps on
+backend='spmd', the forward_ref cache path on 'threads'), and
+`repro.api.serving` adds a continuous-batching request scheduler returning
+a `ServeReport`.
 """
 from repro.api.engine import Engine
-from repro.api.plan import ClusterSpec, PartitionSpec, Plan, RunSpec
+from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
+                            ServeSpec)
 from repro.api.presets import PRESETS, get_preset, list_presets
-from repro.api.report import TrainReport
+from repro.api.report import RequestStats, ServeReport, TrainReport
 from repro.api.sync import ASP, BSP, SyncPolicy, UNBOUNDED_D, WSP
 
 __all__ = [
     "ASP", "BSP", "ClusterSpec", "Engine", "PartitionSpec", "Plan",
-    "PRESETS", "RunSpec", "SyncPolicy", "TrainReport", "UNBOUNDED_D",
-    "WSP", "get_preset", "list_presets",
+    "PRESETS", "RequestStats", "RunSpec", "ServeReport", "ServeSpec",
+    "SyncPolicy", "TrainReport", "UNBOUNDED_D", "WSP", "get_preset",
+    "list_presets",
 ]

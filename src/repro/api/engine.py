@@ -12,9 +12,19 @@ fit() dispatches on the Plan alone:
   backend='spmd'                the jitted pipelined wave step over a
                                 (data, stage, tp) mesh (D = 0)
 
-All backends share model materialization, data loaders and TrainReport
-assembly, and step()/save()/restore() complete the surface: single-wave
-stepping for interactive use, atomic checkpointing, exact resume.
+Serve-mode Plans (Plan.serve = ServeSpec) run through
+prefill()/decode()/generate() with the same dispatch rule:
+
+  backend='spmd'                the pipelined serve steps
+                                (core.wave.build_prefill_step /
+                                build_decode_step) on a (1, stage, tp) mesh
+  backend='threads'             the non-pipelined lm.forward_ref cache path
+                                (the CPU correctness oracle)
+
+All backends share model materialization, data loaders and report assembly
+(TrainReport / ServeReport), and step()/save()/restore() complete the
+surface: single-wave stepping for interactive use, atomic checkpointing,
+exact resume.
 """
 from __future__ import annotations
 
@@ -26,7 +36,7 @@ import jax
 import numpy as np
 
 from repro.api.plan import Plan
-from repro.api.report import TrainReport
+from repro.api.report import ServeReport, TrainReport
 from repro.api.sync import BSP, WSP
 from repro.core.param_server import ParameterServer
 from repro.data.pipeline import MarkovLM, ShardedLoader
@@ -63,6 +73,7 @@ class Engine:
         self._source = None
         self._step_ctx = None      # lazy state for step()
         self._spmd = None          # lazy state for the spmd backend
+        self._serve = None         # lazy state for the serve surface
         self._step_offset = 0      # waves already in a restored checkpoint
         self._fleet_ran = False    # the threaded fleet is single-shot
         self._bsp_wave = 0         # waves the BSP loop has run (this engine)
@@ -95,6 +106,8 @@ class Engine:
         if self._params is None:
             self._params, _ = lm.init_params(self._model_arch(),
                                              jax.random.PRNGKey(run.seed))
+        if plan.serve is not None:
+            return                 # no wave step / loader on the serve path
         if self._wave_step is None and run.backend != "spmd":
             self._wave_step = wave.build_local_wave_step(
                 plan.arch, plan.num_microbatches, self._optimizer)
@@ -131,6 +144,10 @@ class Engine:
         `callback(wave, loss, seconds)` is invoked per wave on backends with
         a central loop (bsp, spmd); the threaded fleet reports at the end."""
         plan = self.plan
+        if plan.serve is not None:
+            raise ValueError("this Plan describes serving (Plan.serve is "
+                             "set); run it through Engine.generate() — "
+                             "fit() trains")
         if plan.run.resume and plan.run.ckpt_dir:
             self.restore()
         if plan.run.backend == "spmd":
@@ -149,6 +166,9 @@ class Engine:
     def step(self):
         """One synchronous wave (single-worker semantics on the threads
         backend, one jitted step on spmd). Returns the wave's loss."""
+        if self.plan.serve is not None:
+            raise ValueError("step() drives a training wave; this Plan "
+                             "serves — use prefill()/decode()/generate()")
         if self.plan.run.backend == "spmd":
             self._ensure_spmd()
             return self._spmd_step()
@@ -241,7 +261,203 @@ class Engine:
             from repro.compat import set_mesh
             with set_mesh(st["mesh"]):
                 st["opt_state"] = self._optimizer.init(st["params"])
+        if self._serve is not None:
+            st = self._serve
+            st["params"] = (self._shard_params(st["mesh"], st["pspecs"],
+                                               self._params)
+                            if st["mode"] == "spmd" else self._params)
         return meta
+
+    # ------------------------------------------------------------------
+    # serve surface: prefill / decode / generate (Plan.serve = ServeSpec)
+    # ------------------------------------------------------------------
+    def _require_serve(self, what: str):
+        if self.plan.serve is None:
+            raise ValueError(f"{what}() serves requests; Plan.serve is "
+                             f"unset — give the Plan a ServeSpec (train "
+                             f"Plans run through fit())")
+
+    def _serve_dtypes(self):
+        from repro.models import lm
+        run, sv = self.plan.run, self.plan.serve
+        return lm.serve_dtypes(run.compute_dtype, sv.cache_dtype)
+
+    def _ensure_serve(self):
+        """Build the serve executors the Plan names: the pipelined mesh
+        steps (backend='spmd') or the forward_ref cache path (threads)."""
+        if self._serve is not None:
+            return
+        from repro.models import lm
+        plan, run, sv = self.plan, self.plan.run, self.plan.serve
+        self._ensure_model()
+        cfg = self._model_arch()
+        _, cache_dt = self._serve_dtypes()
+
+        if run.backend != "spmd":
+            pre_fn, dec_fn = _ref_serve_steps(cfg)
+            self._serve = {"mode": "ref", "cfg": cfg, "params": self._params,
+                           "prefill": jax.jit(pre_fn),
+                           "decode": jax.jit(dec_fn),
+                           "cache_dt": cache_dt, "mesh": None}
+            return
+
+        from repro.compat import set_mesh
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.core import wave
+        from repro.launch.mesh import make_mesh_auto
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        dsz, ssz, tsz = plan.partition.data, plan.stages, plan.tp
+        needed = dsz * ssz * tsz
+        if len(jax.devices()) < needed:
+            raise RuntimeError(
+                f"the spmd serve path needs {needed} devices "
+                f"(data*stages*tp = {dsz}*{ssz}*{tsz}) but jax sees "
+                f"{len(jax.devices())}; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={needed} before "
+                f"jax initializes")
+        mesh = make_mesh_auto((dsz, ssz, tsz), ("data", "stage", "tp"))
+        pspecs = lm.param_specs(cfg)
+        common = dict(arch=cfg, optimizer=run.optimizer, lr=run.lr,
+                      weight_decay=run.weight_decay,
+                      compute_dtype=run.compute_dtype,
+                      cache_dtype=sv.cache_dtype, overlap=run.overlap)
+        rc_pre = RunConfig(shape=ShapeConfig("serve_prefill", sv.prompt_len,
+                                             sv.max_batch, "prefill"),
+                           **common)
+        rc_dec = RunConfig(shape=ShapeConfig("serve_decode", sv.max_len,
+                                             sv.max_batch, "decode"),
+                           **common)
+        pre_step, _, _ = wave.build_prefill_step(rc_pre, mesh,
+                                                 cache_len=sv.max_len)
+        dec_step, _, cspecs = wave.build_decode_step(rc_dec, mesh,
+                                                     pos_per_row=True)
+        p_sh = self._shard_params(mesh, pspecs, self._params)
+        with set_mesh(mesh):
+            csh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cspecs,
+                is_leaf=lambda x: isinstance(x, P))
+
+        def pre_fn(params, inputs, cache):
+            return pre_step(params, {"inputs": inputs, "cache": cache})
+
+        def dec_fn(params, inputs, cache, pos):
+            return dec_step(params, {"inputs": inputs, "cache": cache,
+                                     "pos": pos})
+
+        self._serve = {"mode": "spmd", "cfg": cfg, "params": p_sh,
+                       "prefill": jax.jit(pre_fn),
+                       "decode": jax.jit(dec_fn), "mesh": mesh,
+                       "pspecs": pspecs, "cache_sharding": csh,
+                       "cache_dt": cache_dt}
+
+    def serve_cache(self):
+        """A blank (all-slots-empty) serve cache for max_batch requests of
+        up to serve.max_len positions, placed for this Plan's backend."""
+        from repro.models import lm
+        self._require_serve("serve_cache")
+        self._ensure_serve()
+        st, sv = self._serve, self.plan.serve
+        cache = lm.init_cache(st["cfg"], sv.max_batch, sv.max_len,
+                              dtype=st["cache_dt"])
+        if st["mode"] == "spmd":
+            cache = jax.device_put(cache, st["cache_sharding"])
+        return cache
+
+    def prefill(self, prompts):
+        """Prefill a full batch of prompts into a fresh cache.
+
+        prompts: [max_batch, prompt_len] token ids (or [.., .., d_model]
+        embeddings for frontend archs). Returns (last_logits [B, vocab],
+        cache) — the logits of the final prompt position, i.e. the
+        distribution of the first generated token."""
+        import jax.numpy as jnp
+        self._require_serve("prefill")
+        self._ensure_serve()
+        st, sv = self._serve, self.plan.serve
+        prompts = jnp.asarray(prompts)
+        if prompts.shape[:2] != (sv.max_batch, sv.prompt_len):
+            raise ValueError(
+                f"prompts {prompts.shape} disagree with the frozen serve "
+                f"shapes [{sv.max_batch}, {sv.prompt_len}]; pad the batch "
+                f"to max_batch (ServeSpec shapes compile once)")
+        logits, cache = st["prefill"](st["params"], prompts,
+                                      self.serve_cache())
+        return logits[:, -1], cache
+
+    def decode(self, tokens, cache, pos):
+        """One decode position for the whole batch.
+
+        tokens [B, 1] ids (or [B, 1, d] embeddings); pos a scalar (aligned
+        batch) or [B] vector (continuous batching: each row at its own
+        depth). Returns (logits [B, vocab], cache)."""
+        import jax.numpy as jnp
+        self._require_serve("decode")
+        self._ensure_serve()
+        st, sv = self._serve, self.plan.serve
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            # one trace serves both aligned and per-row decode
+            pos = jnp.broadcast_to(pos, (sv.max_batch,))
+        logits, cache = st["decode"](st["params"], jnp.asarray(tokens),
+                                     cache, pos)
+        return logits[:, -1], cache
+
+    def _serve_prompts(self, key):
+        """Deterministic synthetic prompts (token ids, or stub embeddings
+        for frontend archs) when the caller brings none."""
+        import jax.numpy as jnp
+        from repro.models import frontend
+        sv, cfg = self.plan.serve, self.plan.arch
+        if cfg.frontend != "none":
+            return frontend.stub_embeddings(cfg, key, sv.max_batch,
+                                            sv.prompt_len)
+        return jax.random.randint(key, (sv.max_batch, sv.prompt_len), 0,
+                                  cfg.vocab_size, dtype=jnp.int32)
+
+    def generate(self, prompts=None, *, callback=None) -> ServeReport:
+        """Run the Plan's full serve scenario on one aligned batch: prefill
+        max_batch prompts, then gen greedy/sampled decode positions.
+        Returns a ServeReport with `tokens` [B, gen]. `callback(step,
+        tokens)` is invoked per decode position."""
+        import jax.numpy as jnp
+        from repro.models import frontend
+        self._require_serve("generate")
+        self._ensure_serve()
+        plan, sv, cfg = self.plan, self.plan.serve, self.plan.arch
+        key = jax.random.PRNGKey(sv.sample_seed)
+        if prompts is None:
+            prompts = self._serve_prompts(key)
+        report = ServeReport(arch=cfg.name, backend=plan.run.backend,
+                             max_batch=sv.max_batch)
+        t_start = time.monotonic()
+        logits, cache = self.prefill(prompts)
+        jax.block_until_ready(logits)
+        report.prefill_s = time.monotonic() - t_start
+        tok = _pick(logits, sv.temperature, jax.random.fold_in(key, 0))
+        toks = [tok]
+        if callback is not None:
+            callback(0, tok)
+        for t in range(1, sv.gen):
+            if cfg.frontend != "none":
+                # stub frontends embed generated ids via a fixed projection
+                x = frontend.stub_embeddings(cfg, jax.random.fold_in(key, t),
+                                             sv.max_batch, 1)
+            else:
+                x = toks[-1][:, None]
+            t0 = time.monotonic()
+            logits, cache = self.decode(x, cache,
+                                        jnp.int32(sv.prompt_len + t - 1))
+            jax.block_until_ready(logits)
+            report.decode_s += time.monotonic() - t0
+            report.decode_steps += 1
+            tok = _pick(logits, sv.temperature, jax.random.fold_in(key, t))
+            toks.append(tok)
+            if callback is not None:
+                callback(t, tok)
+        report.tokens = np.stack([np.asarray(t) for t in toks], axis=1)
+        report.wall_s = time.monotonic() - t_start
+        return report
 
     # ------------------------------------------------------------------
     # threads backend: WSP / ASP (policy.execute lands here)
@@ -513,3 +729,37 @@ class Engine:
         report.wall_s = time.monotonic() - t_start
         self._params = jax.tree.map(np.asarray, self._spmd["params"])
         return report
+
+
+# ---------------------------------------------------------------------------
+# serve helpers (module level so jit caches don't capture the Engine)
+# ---------------------------------------------------------------------------
+def _ref_serve_steps(cfg):
+    """The non-pipelined forward_ref cache path: (prefill_fn, decode_fn),
+    each jittable. This is the serve correctness oracle the pipelined mesh
+    steps are parity-tested against."""
+    from repro.models import lm
+
+    def pre_fn(params, prompts, cache):
+        hid, cache, _ = lm.forward_ref(cfg, params, prompts, mode="prefill",
+                                       cache=cache)
+        return lm.logits_ref(cfg, params, hid[:, -1:]), cache
+
+    def dec_fn(params, tokens, cache, pos):
+        hid, cache, _ = lm.forward_ref(cfg, params, tokens, mode="decode",
+                                       cache=cache, pos=pos)
+        return lm.logits_ref(cfg, params, hid), cache
+
+    return pre_fn, dec_fn
+
+
+def _pick(logits, temperature, key):
+    """Next-token choice over [B, vocab] logits: greedy argmax at
+    temperature 0, else categorical sampling."""
+    import jax.numpy as jnp
+
+    if temperature == 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

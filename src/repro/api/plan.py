@@ -1,14 +1,17 @@
 """Declarative experiment Plans.
 
-A Plan is the single description of a training scenario:
+A Plan is the single description of a training OR serving scenario:
 
     Plan = ArchConfig x ShapeConfig x ClusterSpec x PartitionSpec
-           x SyncPolicy x RunSpec
+           x SyncPolicy x RunSpec [x ServeSpec]
 
 It is frozen and validated at construction, so a malformed scenario fails
 where it is written, not three layers down inside a worker thread. The
 Engine (repro.api.engine) is the only consumer: it dispatches to the
 threaded-WSP, BSP-allreduce or jitted-SPMD backend from the Plan alone.
+Setting `serve=ServeSpec(...)` turns the Plan into a serving scenario
+(batched prefill + autoregressive decode) executed through
+`Engine.prefill()/decode()/generate()` instead of `fit()`.
 """
 from __future__ import annotations
 
@@ -87,6 +90,27 @@ class RunSpec:
 
 
 @dataclass(frozen=True)
+class ServeSpec:
+    """Frozen serving shapes and sampling for a serve-mode Plan.
+
+    Serving runs batched prefill over `max_batch` prompts of `prompt_len`
+    tokens, then `gen` autoregressive decode positions against a cache of
+    `max_len = prompt_len + gen` slots. temperature 0 is greedy argmax;
+    temperature > 0 samples categorically (seeded by sample_seed)."""
+
+    prompt_len: int = 24
+    gen: int = 16
+    max_batch: int = 4
+    temperature: float = 0.0
+    sample_seed: int = 0
+    cache_dtype: str = ""           # "" -> run.compute_dtype; "f8" -> fp8 KV
+
+    @property
+    def max_len(self) -> int:
+        return self.prompt_len + self.gen
+
+
+@dataclass(frozen=True)
 class Plan:
     arch: Optional[ArchConfig] = None
     shape: Optional[ShapeConfig] = None
@@ -94,6 +118,7 @@ class Plan:
     partition: PartitionSpec = field(default_factory=PartitionSpec)
     sync: SyncPolicy = field(default_factory=WSP)
     run: RunSpec = field(default_factory=RunSpec)
+    serve: Optional[ServeSpec] = None
 
     def __post_init__(self):
         self.validate()
@@ -252,6 +277,64 @@ class Plan:
                     "(num_vw/speeds/straggle_fns/fail_at) only drive the "
                     "threaded fleet — unset them or use backend='threads'")
 
+        if self.serve is not None:
+            self._validate_serve()
+
+    def _validate_serve(self) -> None:
+        """Serve-mode Plans: reject train-only knobs the serve path would
+        silently drop (the same convention the train backends follow)."""
+        sv, run, cl = self.serve, self.run, self.cluster
+        if not isinstance(sv, ServeSpec):
+            raise TypeError(f"serve must be a ServeSpec, got {sv!r}")
+        if self.arch is None:
+            raise ValueError("serving builds the model from the "
+                             "architecture; Plan.arch is required when "
+                             "Plan.serve is set")
+        if sv.prompt_len < 1 or sv.gen < 1 or sv.max_batch < 1:
+            raise ValueError(f"bad serve spec: prompt_len={sv.prompt_len} "
+                             f"gen={sv.gen} max_batch={sv.max_batch} "
+                             f"(all must be >= 1)")
+        if sv.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{sv.temperature}")
+        if sv.cache_dtype not in ("", "f8"):
+            raise ValueError(f"unknown serve cache_dtype "
+                             f"{sv.cache_dtype!r}; expected '' (compute "
+                             f"dtype) or 'f8'")
+        if self.shape is not None:
+            raise ValueError("serve shapes (prefill/decode/max batch) are "
+                             "frozen in Plan.serve; drop Plan.shape")
+        if not isinstance(self.sync, WSP) or self.sync.D != 0 \
+                or self.sync.async_push:
+            raise ValueError(
+                f"serving runs no gradient synchronization; Plan.sync must "
+                f"be the default WSP(D=0) on a serve Plan, got "
+                f"{self.sync.describe()}")
+        if run.ckpt_dir or run.ckpt_every or run.resume:
+            raise ValueError(
+                "ckpt_dir/ckpt_every/resume drive the training loop; a "
+                "serve Plan has no optimizer state to checkpoint — use "
+                "Engine.restore() to load trained weights before serving")
+        if run.codec is not None or run.compression_ratio is not None:
+            raise ValueError(
+                "gradient codecs ride the training push path; the serve "
+                "path moves KV cache, not deltas — drop "
+                "codec/compression_ratio (use serve.cache_dtype='f8' to "
+                "shrink the cache)")
+        if cl.num_vw != 1 or cl.speeds is not None \
+                or cl.straggle_fns is not None or cl.fail_at \
+                or cl.topology is not None:
+            raise ValueError(
+                "ClusterSpec heterogeneity knobs (num_vw/speeds/"
+                "straggle_fns/fail_at/topology) drive the threaded "
+                "training fleet; the serve path batches requests on one "
+                "host or mesh — unset them")
+        if run.backend == "spmd" and self.partition.data != 1:
+            raise ValueError(
+                "serve batches live whole on the model (stage x tp) mesh; "
+                "data-parallel serve replicas are not wired yet — set "
+                "partition.data=1")
+
     # ---- ergonomics -----------------------------------------------------
     def replace(self, **kw) -> "Plan":
         """dataclasses.replace with one level of nesting via double
@@ -271,6 +354,12 @@ class Plan:
 
     def describe(self) -> str:
         arch = self.arch.name if self.arch else "<injected wave step>"
+        if self.serve is not None:
+            sv = self.serve
+            return (f"Plan({arch}, serve, backend={self.run.backend}, "
+                    f"batch={sv.max_batch}, prompt={sv.prompt_len}, "
+                    f"gen={sv.gen}, "
+                    f"{'greedy' if sv.temperature == 0 else 'sampled'})")
         topo = self.cluster.topology
         topo = topo if isinstance(topo, (str, type(None))) else "custom"
         return (f"Plan({arch}, backend={self.run.backend}, "

@@ -16,7 +16,8 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.api.engine import Engine
-from repro.api.plan import ClusterSpec, PartitionSpec, Plan, RunSpec
+from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
+                            ServeSpec)
 from repro.api.sync import BSP, WSP
 
 PRESETS: dict[str, Callable[[], Plan]] = {}
@@ -105,6 +106,25 @@ def spmd_tiny() -> Plan:
                 run=RunSpec(backend="spmd", max_waves=8, batch=8, seq=32))
 
 
+@preset("serve_tiny")
+def serve_tiny() -> Plan:
+    """Batched greedy serving on the CPU reference path (prefill + decode
+    through Engine.generate(), or continuous batching via
+    repro.api.serving)."""
+    return Plan(arch=_tiny_arch(),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4))
+
+
+@preset("serve_spmd")
+def serve_spmd() -> Plan:
+    """The pipelined serve steps on a (1, 2, 1) mesh — 2 (fake CPU)
+    devices: XLA_FLAGS=--xla_force_host_platform_device_count=2."""
+    return Plan(arch=_tiny_arch(num_layers=2),
+                partition=PartitionSpec(stages=2, tp=1, data=1),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4),
+                run=RunSpec(backend="spmd"))
+
+
 def main(argv=None):
     import argparse
 
@@ -124,6 +144,16 @@ def main(argv=None):
     plan = get_preset(a.run, **({"run__max_waves": a.waves} if a.waves
                                 else {}))
     print(plan.describe())
+    if plan.serve is not None:
+        rep = Engine(plan).generate()
+        sv = plan.serve
+        assert rep.tokens.shape == (sv.max_batch, sv.gen), rep.tokens.shape
+        print(f"batch={sv.max_batch} prefill({sv.prompt_len} tok)="
+              f"{rep.prefill_s*1e3:.1f}ms decode={rep.ms_per_token():.1f}"
+              f"ms/tok throughput={rep.tokens_per_s():.1f} tok/s")
+        print("generated ids[0]:", rep.tokens[0].tolist())
+        print("OK")
+        return 0
     report = Engine(plan).fit()
     t, loss = report.loss_curve()
     print(f"waves={report.waves} wall={report.wall_s:.1f}s "

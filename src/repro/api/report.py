@@ -1,12 +1,15 @@
-"""Training report returned by every Engine backend.
+"""Reports returned by the Engine.
 
-One report type for the threaded WSP fleet, the BSP all-reduce loop and the
-jitted SPMD path, so downstream analysis (benchmarks, examples, CI asserts)
-never cares which backend produced it.
+TrainReport: one report type for the threaded WSP fleet, the BSP all-reduce
+loop and the jitted SPMD path. ServeReport: its serving sibling, assembled
+by Engine.generate() and the repro.api.serving scheduler. Downstream
+analysis (benchmarks, examples, CI asserts) never cares which backend
+produced either.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any, Optional
 
 import numpy as np
 
@@ -39,3 +42,63 @@ class TrainReport:
         for _, wid, loss in self.losses:
             out.setdefault(wid, []).append(loss)
         return out
+
+
+@dataclass
+class RequestStats:
+    """Per-request accounting from the serving scheduler."""
+
+    rid: int
+    prompt_len: int = 0
+    tokens: list = field(default_factory=list)    # generated token ids
+    admitted_step: int = -1     # global decode step at admission
+    finished_step: int = -1     # global decode step at retirement
+    slot: int = -1              # batch slot the request occupied
+    prefill_s: float = 0.0      # duration of the batched prefill call this
+                                # request rode in (shared by every request
+                                # of its admission group, so summing it
+                                # across requests over-counts wall time)
+    latency_s: float = 0.0      # admission -> last token (wall clock)
+
+    @property
+    def new_tokens(self) -> int:
+        return len(self.tokens)
+
+
+@dataclass
+class ServeReport:
+    """Serving metrics: the TrainReport sibling for prefill/decode runs."""
+
+    arch: str = ""
+    backend: str = ""
+    tokens: Any = None          # generate(): [B, gen] generated ids (token
+                                # archs) — scheduler runs use `requests`
+    requests: list = field(default_factory=list)  # RequestStats
+    prefill_s: float = 0.0      # total time inside prefill calls
+    decode_s: float = 0.0       # total time inside decode calls
+    decode_steps: int = 0       # batched decode calls issued
+    slot_steps: int = 0         # sum over decode steps of active slots
+    max_batch: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_out(self) -> int:
+        if self.requests:
+            return sum(r.new_tokens for r in self.requests)
+        if self.tokens is not None:
+            return int(np.asarray(self.tokens).size)
+        return 0
+
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    def ms_per_token(self) -> float:
+        return (self.decode_s / self.decode_steps * 1e3
+                if self.decode_steps else 0.0)
+
+    def occupancy(self) -> Optional[float]:
+        """Mean fraction of decode-batch slots doing useful work (scheduler
+        runs only; None for aligned-batch generate())."""
+        if not self.decode_steps or not self.max_batch or not self.requests:
+            return None
+        return self.slot_steps / (self.decode_steps * self.max_batch)

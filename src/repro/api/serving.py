@@ -1,0 +1,201 @@
+"""Continuous-batching request scheduler over the Engine's serve surface.
+
+The Engine's generate() runs one aligned batch: every slot prefetches and
+retires together. Real traffic is ragged — requests arrive while a decode
+batch is in flight and finish at different depths. The Scheduler closes
+that gap with the standard continuous-batching loop:
+
+  admit   pop queued requests into free batch slots: one padded prefill
+          call computes their caches, whose rows are copied into the
+          assigned slots (whole-row adoption also clears any stale state
+          left by the slot's previous occupant)
+  decode  one jitted decode call advances every active slot by one token;
+          slots sit at different depths, carried by the per-row position
+          vector (core.wave pos_per_row / forward_ref vector pos)
+  retire  finished sequences free their slots for the next admission
+
+Requests are admitted strictly FIFO, so no request starves: each admission
+takes the longest-waiting request first. Per-request token picks are keyed
+by (sample_seed, rid, k), so a request's output is independent of which
+neighbors it was co-batched with — bit-identical across schedules for the
+dense/attention-free families (MoE capacity routing is batch-coupled by
+construction).
+
+    from repro.api import Engine, get_preset
+    from repro.api.serving import Request, Scheduler
+    eng = Engine(get_preset("serve_tiny"))
+    reqs = [Request(rid=i, prompt=prompts[i]) for i in range(8)]
+    report = Scheduler(eng).run(reqs)        # -> ServeReport
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.api.engine import Engine
+from repro.api.report import RequestStats, ServeReport
+
+
+@dataclass
+class Request:
+    """One serving request: a prompt of exactly serve.prompt_len token ids
+    and an optional per-request generation budget (0 -> serve.gen; the
+    cache is sized for at most serve.gen new tokens)."""
+
+    rid: int
+    prompt: Any                 # [prompt_len] token ids
+    max_new_tokens: int = 0
+
+
+class _Slot:
+    """An in-flight request occupying one decode-batch row."""
+
+    __slots__ = ("req", "stats", "limit", "next_pos", "last_tok", "t_admit")
+
+    def __init__(self, req, stats, limit, next_pos, last_tok, t_admit):
+        self.req, self.stats, self.limit = req, stats, limit
+        self.next_pos, self.last_tok = next_pos, last_tok
+        self.t_admit = t_admit
+
+
+def _adopt_slots(cache, fresh, pairs):
+    """Copy freshly prefilled cache rows into their assigned batch slots —
+    one gather/scatter per leaf for the whole admission group. Every cache
+    leaf carries the batch at dim 1; whole-row replacement also clears any
+    stale KV / ring-buffer / SSM state from the slot's previous occupant."""
+    srcs = np.array([s for s, _ in pairs])
+    dsts = np.array([d for _, d in pairs])
+    return jax.tree.map(lambda big, f: big.at[:, dsts].set(f[:, srcs]),
+                        cache, fresh)
+
+
+class Scheduler:
+    def __init__(self, engine: Engine):
+        plan = engine.plan
+        if plan.serve is None:
+            raise ValueError("the Scheduler drives serve Plans; Plan.serve "
+                             "is unset — give the Plan a ServeSpec")
+        if plan.arch.frontend != "none":
+            raise ValueError(
+                f"{plan.arch.name} is a stub-frontend architecture (inputs "
+                f"are precomputed embeddings, not token ids); the request "
+                f"scheduler feeds generated ids back — serve it through "
+                f"Engine.generate() instead")
+        self.engine = engine
+        self.sv = plan.serve
+
+    # ------------------------------------------------------------------
+    def _pick_one(self, row, rid: int, k: int, key) -> int:
+        """Next token for one request, keyed by (rid, k) so co-batching
+        never changes a request's sample stream."""
+        if self.sv.temperature == 0:
+            return int(np.argmax(row))
+        rk = jax.random.fold_in(jax.random.fold_in(key, rid), k)
+        return int(jax.random.categorical(
+            rk, np.asarray(row, np.float32) / self.sv.temperature))
+
+    def run(self, requests, *, callback=None) -> ServeReport:
+        """Serve `requests` (admitted FIFO) to completion. `callback(step,
+        active_slots)` fires after every batched decode step."""
+        eng, sv = self.engine, self.sv
+        B, P = sv.max_batch, sv.prompt_len
+        plan = eng.plan
+        key = jax.random.PRNGKey(sv.sample_seed)
+        queue = deque(requests)
+        for r in queue:
+            prompt = np.asarray(r.prompt)
+            if prompt.shape != (P,):
+                raise ValueError(
+                    f"request {r.rid}: prompt shape {prompt.shape} != "
+                    f"({P},); serve shapes are frozen in the Plan "
+                    f"(ServeSpec.prompt_len)")
+            if not 0 <= r.max_new_tokens <= sv.gen:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
+                    f"must be in [0 (= the ServeSpec default), "
+                    f"ServeSpec.gen={sv.gen}] — the cache is sized for "
+                    f"gen new tokens")
+        report = ServeReport(arch=plan.arch.name, backend=plan.run.backend,
+                             max_batch=B)
+        cache = eng.serve_cache()
+        active: dict[int, _Slot] = {}
+        free = list(range(B))
+        step = 0
+        t_start = time.monotonic()
+
+        def retire(s: int, slot: _Slot):
+            slot.stats.finished_step = step
+            slot.stats.latency_s = time.monotonic() - slot.t_admit
+            report.requests.append(slot.stats)
+            free.append(s)
+            free.sort()
+
+        while queue or active:
+            # ---- admit: longest-waiting requests into the lowest slots --
+            if free and queue:
+                admits = []
+                while free and queue:
+                    admits.append((queue.popleft(), free.pop(0)))
+                prompts = np.zeros((B, P), np.int32)
+                for j, (r, _) in enumerate(admits):
+                    prompts[j] = np.asarray(r.prompt)
+                t0 = time.monotonic()
+                logits, fresh = eng.prefill(prompts)
+                logits = np.asarray(logits)
+                dt = time.monotonic() - t0
+                report.prefill_s += dt
+                cache = _adopt_slots(cache, fresh,
+                                     [(j, s) for j, (_, s) in
+                                      enumerate(admits)])
+                for j, (r, s) in enumerate(admits):
+                    tok = self._pick_one(logits[j], r.rid, 0, key)
+                    stats = RequestStats(rid=r.rid, prompt_len=P,
+                                         tokens=[tok], admitted_step=step,
+                                         slot=s, prefill_s=dt)
+                    slot = _Slot(r, stats, r.max_new_tokens or sv.gen,
+                                 next_pos=P, last_tok=tok, t_admit=t0)
+                    if len(stats.tokens) >= slot.limit:
+                        retire(s, slot)
+                    else:
+                        active[s] = slot
+            if not active:
+                continue
+            # ---- one batched decode step over every active slot ---------
+            toks = np.zeros((B, 1), np.int32)
+            pos = np.zeros(B, np.int32)
+            for s, slot in active.items():
+                toks[s, 0] = slot.last_tok
+                pos[s] = slot.next_pos
+            t0 = time.monotonic()
+            logits, cache = eng.decode(toks, cache, pos)
+            logits = np.asarray(logits)
+            report.decode_s += time.monotonic() - t0
+            report.decode_steps += 1
+            report.slot_steps += len(active)
+            step += 1
+            # ---- advance / retire --------------------------------------
+            for s in sorted(active):
+                slot = active[s]
+                tok = self._pick_one(logits[s], slot.req.rid,
+                                     len(slot.stats.tokens), key)
+                slot.stats.tokens.append(tok)
+                slot.next_pos += 1
+                slot.last_tok = tok
+                if len(slot.stats.tokens) >= slot.limit:
+                    del active[s]
+                    retire(s, slot)
+            if callback is not None:
+                callback(step, len(active))
+        report.wall_s = time.monotonic() - t_start
+        report.requests.sort(key=lambda r: r.rid)
+        return report
+
+
+def serve(engine: Engine, requests, *, callback=None) -> ServeReport:
+    """One-shot convenience: Scheduler(engine).run(requests)."""
+    return Scheduler(engine).run(requests, callback=callback)

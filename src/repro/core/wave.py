@@ -134,8 +134,12 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
         mb_c = jnp.clip(mb_idx, 0, nm - 1)
         x_fresh = jax.lax.dynamic_index_in_dim(x_wave, mb_c, 0, keepdims=False)
         x_in = jnp.where(si == 0, x_fresh, buf_in)
+        # per-row decode positions ([Bl] vector) slice with the microbatch,
+        # like the cache; a scalar pos is shared by every row
+        pos_mb = (jax.lax.dynamic_slice_in_dim(pos, mb_c * mb, mb)
+                  if pos is not None and jnp.ndim(pos) == 1 else pos)
         if cache_c is None:
-            y, _, aux_t = stage_fn(x_in, None, valid, pos_=pos)
+            y, _, aux_t = stage_fn(x_in, None, valid, pos_=pos_mb)
         else:
             # serve path (no AD): bubble ticks skip the cache read/write and
             # the stage compute entirely — otherwise every dead tick pays the
@@ -143,7 +147,7 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
             # measured 2.9x for decode_32k at nm=8 — EXPERIMENTS.md §Perf)
             def live(cc):
                 cm = _cache_slice_mb(cc, mb_c, mb)
-                y_, new_cm, a_ = stage_fn(x_in, cm, valid, pos_=pos)
+                y_, new_cm, a_ = stage_fn(x_in, cm, valid, pos_=pos_mb)
                 cc = _cache_update_mb(cc, new_cm, mb_c, mb, valid)
                 return cc, y_, a_
 
@@ -291,8 +295,14 @@ def _serve_nm(run: RunConfig, mesh) -> tuple[int, int]:
     return nm, vw_b // nm
 
 
-def build_decode_step(run: RunConfig, mesh: Mesh):
-    """step(params, batch{'inputs','cache','pos'}) -> (logits, cache)."""
+def build_decode_step(run: RunConfig, mesh: Mesh, *,
+                      pos_per_row: bool = False):
+    """step(params, batch{'inputs','cache','pos'}) -> (logits, cache).
+
+    pos_per_row=True: batch['pos'] is a [B] vector — each batch row decodes
+    at its own depth (continuous batching; rows at different generation
+    depths share one jitted step). Requires an unsharded batch (data=1);
+    the default scalar pos is the aligned-batch fast path."""
     cfg, shp = run.arch, run.shape
     nm, _ = _serve_nm(run, mesh)
     meta_arrs, meta_specs = _meta_tree(cfg)
@@ -300,13 +310,16 @@ def build_decode_step(run: RunConfig, mesh: Mesh):
     tp_axis = T_AX if cfg.tp > 1 else None
     seq_sharded = shp.global_batch < 16 and D_AX in mesh.axis_names
     merge_axis = D_AX if seq_sharded else None
-    cdt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
-    cache_dt = {"f8": jnp.float8_e4m3fn, "": cdt}.get(run.cache_dtype, cdt)
+    cdt, cache_dt = lm.serve_dtypes(run.compute_dtype, run.cache_dtype)
     _, cspecs = lm.cache_struct(cfg, shp.global_batch, shp.seq_len,
                                 seq_shards=16 if seq_sharded else 1,
                                 dtype=cache_dt)
     dp = dp_axes(mesh) if not seq_sharded else ()
     nd = mesh.shape[D_AX] if D_AX in mesh.axis_names else 1
+    if pos_per_row and n_dp(mesh) != 1:
+        raise ValueError("pos_per_row decode needs the whole batch on every "
+                         "data shard; use a data=1 mesh")
+    pos_spec = P(None) if pos_per_row else P()
 
     def body(blocks, x, meta, cache, pos):
         so = jax.lax.axis_index(D_AX) * (shp.seq_len // nd) if seq_sharded \
@@ -320,7 +333,7 @@ def build_decode_step(run: RunConfig, mesh: Mesh):
     pipe = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs,
-                  P()),
+                  pos_spec),
         out_specs=(P(dp, None, None), cspecs, P()),
         check_vma=False,
     )
@@ -335,17 +348,20 @@ def build_decode_step(run: RunConfig, mesh: Mesh):
     return decode_step, pspecs, cspecs
 
 
-def build_prefill_step(run: RunConfig, mesh: Mesh):
-    """step(params, batch{'inputs','cache'}) -> (last_logits, cache)."""
+def build_prefill_step(run: RunConfig, mesh: Mesh, *, cache_len: int = 0):
+    """step(params, batch{'inputs','cache'}) -> (last_logits, cache).
+
+    cache_len > shp.seq_len sizes the cache for the decode phase that
+    follows prefill (serve: prompt_len inputs, prompt_len + gen cache slots;
+    the prefill write zero-pads the unwritten tail)."""
     cfg, shp = run.arch, run.shape
     nm, _ = _serve_nm(run, mesh)
     meta_arrs, meta_specs = _meta_tree(cfg)
     pspecs = lm.param_specs(cfg)
     tp_axis = T_AX if cfg.tp > 1 else None
-    cdt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
-    cache_dt = {"f8": jnp.float8_e4m3fn, "": cdt}.get(run.cache_dtype, cdt)
-    _, cspecs = lm.cache_struct(cfg, shp.global_batch, shp.seq_len,
-                                dtype=cache_dt)
+    cdt, cache_dt = lm.serve_dtypes(run.compute_dtype, run.cache_dtype)
+    _, cspecs = lm.cache_struct(cfg, shp.global_batch,
+                                cache_len or shp.seq_len, dtype=cache_dt)
     dp = dp_axes(mesh)
 
     def body(blocks, x, meta, cache):

@@ -1,78 +1,106 @@
-"""Serving driver: batched prefill + autoregressive decode on a reduced model
-(CPU) using the reference per-layer path, or the pipelined serve steps on a
-mesh. Demonstrates the cache machinery end to end with batched requests.
+"""Serving driver — a thin CLI over the repro.api serve surface.
+
+Builds a serve-mode Plan (Plan.serve = ServeSpec) and runs it through the
+same Engine the training drivers use:
+
+  --backend threads   the non-pipelined forward_ref cache path (CPU oracle)
+  --backend spmd      the pipelined prefill/decode steps on a
+                      (1, stages, tp) mesh (re-execs with XLA_FLAGS when
+                      --devices asks for fake CPU devices)
+
+By default one aligned batch runs through Engine.generate(); --requests N
+instead pushes N FIFO requests through the continuous-batching scheduler
+(repro.api.serving) and prints per-request latency and slot occupancy.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
       --batch 4 --prompt-len 24 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 8 --batch 2 --gen 8
 """
 from __future__ import annotations
 
 import argparse
-import time
+import os
+import sys
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode batch slots (ServeSpec.max_batch)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    a = ap.parse_args()
+    ap.add_argument("--backend", choices=("threads", "spmd"),
+                    default="threads")
+    ap.add_argument("--mesh", default="1,2,1",
+                    help="spmd backend: data,stages,tp (data must be 1)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="spmd backend: fake host device count")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N requests through the continuous-batching "
+                         "scheduler instead of one aligned batch")
+    return ap
+
+
+def main(argv=None):
+    a = build_parser().parse_args(argv)
+
+    if a.backend == "spmd" and a.devices and argv is None \
+            and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={a.devices}"
+        os.execv(sys.executable, [sys.executable] + sys.argv)
 
     import jax
-    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import Engine, PartitionSpec, Plan, RunSpec, ServeSpec
+    from repro.api.serving import Request, Scheduler
     from repro.configs import ARCHS, reduced as make_reduced
-    from repro.models import lm, frontend
 
     cfg = ARCHS[a.arch]
     if a.reduced:
         cfg = make_reduced(cfg)
-    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
-    key = jax.random.PRNGKey(1)
-    S_max = a.prompt_len + a.gen
-    B = a.batch
-    if cfg.frontend != "none":
-        prompt = frontend.stub_embeddings(cfg, key, B, a.prompt_len)
-    else:
-        prompt = jax.random.randint(key, (B, a.prompt_len), 0,
-                                    cfg.vocab_size, dtype=jnp.int32)
 
-    cache = lm.init_cache(cfg, B, S_max, dtype=jnp.float32)
-    t0 = time.time()
-    hid, cache, _ = lm.forward_ref(cfg, params, prompt, mode="prefill",
-                                   cache=cache)
-    logits = lm.logits_ref(cfg, params, hid[:, -1:])
-    t_prefill = time.time() - t0
+    partition = PartitionSpec()
+    if a.backend == "spmd":
+        dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
+        partition = PartitionSpec(data=dsz, stages=ssz, tp=tsz)
+    plan = Plan(arch=cfg, partition=partition,
+                serve=ServeSpec(prompt_len=a.prompt_len, gen=a.gen,
+                                max_batch=a.batch,
+                                temperature=a.temperature),
+                run=RunSpec(backend=a.backend))
+    eng = Engine(plan)
 
-    @jax.jit
-    def decode_one(params, cache, tok, pos):
-        x = tok if cfg.frontend != "none" else tok
-        hid, cache, _ = lm.forward_ref(cfg, params, x, mode="decode",
-                                       cache=cache, pos=pos)
-        return lm.logits_ref(cfg, params, hid), cache
+    if a.requests:
+        rng = np.random.default_rng(1)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, a.prompt_len,
+                                            dtype=np.int32))
+                for i in range(a.requests)]
+        rep = Scheduler(eng).run(reqs)
+        occ = rep.occupancy()       # None when no decode step ran (gen=1)
+        print(f"arch={cfg.name} backend={a.backend} requests={a.requests} "
+              f"slots={a.batch} tokens={rep.tokens_out} "
+              f"decode={rep.ms_per_token():.1f}ms/tok "
+              f"throughput={rep.tokens_per_s():.1f} tok/s "
+              f"occupancy={'n/a' if occ is None else f'{occ:.2f}'}")
+        lat = sorted(r.latency_s for r in rep.requests)
+        print(f"latency: p50={lat[len(lat) // 2] * 1e3:.1f}ms "
+              f"max={lat[-1] * 1e3:.1f}ms")
+        print("generated ids[rid=0]:", rep.requests[0].tokens)
+        return
 
-    toks = []
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t0 = time.time()
-    for t in range(a.gen):
-        pos = jnp.int32(a.prompt_len + t)
-        if cfg.frontend != "none":
-            # stub frontends embed generated ids through a fixed projection
-            x = frontend.stub_embeddings(cfg, jax.random.fold_in(key, t),
-                                         B, 1)
-        else:
-            x = tok
-        lg, cache = decode_one(params, cache, x, pos)
-        tok = jnp.argmax(lg[:, -1], axis=-1)[:, None]
-        toks.append(tok)
-    t_dec = time.time() - t0
-    out = jnp.concatenate(toks, axis=1)
-    print(f"arch={cfg.name} batch={B} prefill({a.prompt_len} tok)="
-          f"{t_prefill*1e3:.1f}ms decode {a.gen} steps="
-          f"{t_dec*1e3:.1f}ms ({t_dec/a.gen*1e3:.1f} ms/tok)")
-    print("generated ids[0]:", out[0].tolist())
+    rep = eng.generate()
+    print(f"arch={cfg.name} backend={a.backend} batch={a.batch} "
+          f"prefill({a.prompt_len} tok)={rep.prefill_s * 1e3:.1f}ms "
+          f"decode {rep.decode_steps} steps={rep.decode_s * 1e3:.1f}ms "
+          f"({rep.ms_per_token():.1f} ms/tok)")
+    print("generated ids[0]:", np.asarray(rep.tokens)[0].tolist())
 
 
 if __name__ == "__main__":

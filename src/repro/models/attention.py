@@ -129,9 +129,11 @@ def decode_attend(q1, k_cache, v_cache, gpos, pos, *, window: int = 0,
     """Single-token attention against a (possibly sequence-sharded) KV cache.
 
     q1 [B, 1, H, hd] (already roped at `pos`); k_cache/v_cache [B, Sc, KV, hd]
-    (the local shard); gpos [Sc] global positions of the cached slots; pos the
-    current global position. merge_axis: mesh axis name for flash-decoding
-    style logsumexp merge across sequence shards.
+    (the local shard); gpos [Sc] (or per-row [B, Sc]) global positions of the
+    cached slots; pos the current global position — a scalar, or a [B] vector
+    when batch rows decode at different depths (continuous batching).
+    merge_axis: mesh axis name for flash-decoding style logsumexp merge
+    across sequence shards.
     """
     B, _, H, hd = q1.shape
     _, Sc, KV, _ = k_cache.shape
@@ -139,14 +141,18 @@ def decode_attend(q1, k_cache, v_cache, gpos, pos, *, window: int = 0,
     scale = hd ** -0.5
     qr = q1.reshape(B, KV, G, hd).astype(jnp.float32)
     s = jnp.einsum("bkgd,bckd->bkgc", qr, k_cache.astype(jnp.float32)) * scale
-    valid = (gpos <= pos) & (gpos >= 0)
+    pos_b = jnp.asarray(pos)
+    pos_b = pos_b[None] if pos_b.ndim == 0 else pos_b           # [1] or [B]
+    gpos_b = jnp.asarray(gpos)
+    gpos_b = gpos_b[None] if gpos_b.ndim == 1 else gpos_b       # [1|B, Sc]
+    valid = (gpos_b <= pos_b[:, None]) & (gpos_b >= 0)
     if window > 0:
-        valid &= (pos - gpos) < window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid &= (pos_b[:, None] - gpos_b) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     m_safe = jnp.maximum(m, NEG_INF / 2)
     p = jnp.exp(s - m_safe[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
     if merge_axis is not None:

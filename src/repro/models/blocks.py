@@ -93,7 +93,9 @@ def _qkv(cfg: ArchConfig, p, xn, ctx: LayerCtx):
     else:
         theta = jnp.where(ctx.kind == 0, tg, tl)
     if ctx.mode == "decode":
-        positions = jnp.asarray(ctx.pos)[None]
+        p_ = jnp.asarray(ctx.pos)
+        # scalar pos -> [1] (broadcast over batch); per-row pos [B] -> [B, 1]
+        positions = p_[None] if p_.ndim == 0 else p_[:, None]
     else:
         positions = ctx.q_offset + jnp.arange(S)
     cos, sin = rope_cos_sin(positions, hd, theta)
@@ -158,10 +160,25 @@ def _upd_kv(group, i, pos_idx, new_row, sel):
     return jax.lax.dynamic_update_slice(group, upd, start)
 
 
+def _upd_kv_rows(group, i, pos_idx, new_row, sel):
+    """Per-row conditional cache write for continuous batching: each batch
+    row b lands at its own position pos_idx[b]. group [m, B, S, KV, hd],
+    new_row [B, 1, KV, hd], pos_idx/sel [B]."""
+    rows = jnp.arange(group.shape[1])
+    old = group[i, rows, pos_idx]                       # [B, KV, hd]
+    upd = jnp.where(sel[:, None, None],
+                    new_row[:, 0].astype(group.dtype), old)
+    return group.at[i, rows, pos_idx].set(upd)
+
+
 def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
-    """Single-token attention against the stage-local cache groups."""
+    """Single-token attention against the stage-local cache groups. ctx.pos
+    is a scalar (aligned batch) or a [B] vector (continuous batching: each
+    row at its own depth)."""
     q, k, v = _qkv(cfg, p, xn, ctx)
     B, _, Hl, hd = q.shape
+    pos_a = jnp.asarray(ctx.pos)
+    per_row = pos_a.ndim == 1
     new_cache = dict(cache)
     outs = []
 
@@ -169,12 +186,16 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         kf, vf = cache["kv_full"]
         i = jnp.asarray(ctx.full_i)
         Sc = kf.shape[2]
-        li = jnp.asarray(ctx.pos) - ctx.seq_offset
+        li = pos_a - ctx.seq_offset                     # scalar or [B]
         in_rng = (li >= 0) & (li < Sc)
         lic = jnp.clip(li, 0, Sc - 1)
         sel = jnp.asarray(ctx.kind == 0) & in_rng & jnp.asarray(ctx.valid)
-        kf = _upd_kv(kf, i, lic, k, sel)
-        vf = _upd_kv(vf, i, lic, v, sel)
+        if per_row:
+            kf = _upd_kv_rows(kf, i, lic, k, sel)
+            vf = _upd_kv_rows(vf, i, lic, v, sel)
+        else:
+            kf = _upd_kv(kf, i, lic, k, sel)
+            vf = _upd_kv(vf, i, lic, v, sel)
         new_cache["kv_full"] = (kf, vf)
         gpos = ctx.seq_offset + jnp.arange(Sc)
         o_full = attn_lib.decode_attend(q, kf[i], vf[i], gpos, ctx.pos,
@@ -185,12 +206,20 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         kw, vw = cache["kv_win"]
         i = jnp.asarray(ctx.win_i)
         W = kw.shape[2]
-        slot = jnp.asarray(ctx.pos) % W
+        slot = pos_a % W                                # scalar or [B]
         sel = jnp.asarray(ctx.kind == 1) & jnp.asarray(ctx.valid)
-        kw = _upd_kv(kw, i, slot, k, sel)
-        vw = _upd_kv(vw, i, slot, v, sel)
+        if per_row:
+            kw = _upd_kv_rows(kw, i, slot, k,
+                              jnp.broadcast_to(sel, (B,)))
+            vw = _upd_kv_rows(vw, i, slot, v,
+                              jnp.broadcast_to(sel, (B,)))
+            # ring slot j holds position pos_b - ((pos_b - j) % W), per row
+            gpos = pos_a[:, None] - ((pos_a[:, None] - jnp.arange(W)) % W)
+        else:
+            kw = _upd_kv(kw, i, slot, k, sel)
+            vw = _upd_kv(vw, i, slot, v, sel)
+            gpos = ctx.pos - ((ctx.pos - jnp.arange(W)) % W)
         new_cache["kv_win"] = (kw, vw)
-        gpos = ctx.pos - ((ctx.pos - jnp.arange(W)) % W)
         o_win = attn_lib.decode_attend(q, kw[i], vw[i], gpos, ctx.pos,
                                        window=W + 1, merge_axis=None)
         outs.append((1, o_win))

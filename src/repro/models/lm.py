@@ -290,6 +290,16 @@ def stage_apply(cfg: ArchConfig, blocks_local, x, meta_local, ctx: LayerCtx,
 # ----------------------------------------------------------------------------
 # Caches
 # ----------------------------------------------------------------------------
+def serve_dtypes(compute_dtype: str, cache_dtype: str = ""):
+    """Resolve the string knobs shared by RunConfig/ServeSpec to
+    (compute jnp dtype, cache jnp dtype): compute 'bfloat16' | 'float32';
+    cache '' (= compute dtype) or 'f8' (fp8 KV). One mapping for every
+    consumer (wave steps, input specs, the Engine serve path), so a new
+    cache dtype cannot drift between the allocator and the compiled step."""
+    cdt = jnp.bfloat16 if compute_dtype == "bfloat16" else jnp.float32
+    return cdt, {"f8": jnp.float8_e4m3fn, "": cdt}.get(cache_dtype, cdt)
+
+
 def cache_struct(cfg: ArchConfig, batch: int, max_len: int, *,
                  seq_shards: int = 1, dtype=jnp.bfloat16):
     """Returns (cache_shapes pytree of ShapeDtypeStruct, specs pytree).
@@ -397,13 +407,12 @@ def input_specs(run: RunConfig) -> dict[str, Any]:
     cfg, shp = run.arch, run.shape
     B, S = shp.global_batch, shp.seq_len
     stub = cfg.frontend != "none"
-    dt = jnp.bfloat16 if run.compute_dtype == "bfloat16" else jnp.float32
+    dt, cache_dt = serve_dtypes(run.compute_dtype, run.cache_dtype)
     if shp.kind == "train":
         inp = (jax.ShapeDtypeStruct((B, S, cfg.d_model), dt) if stub
                else jax.ShapeDtypeStruct((B, S), jnp.int32))
         return {"inputs": inp,
                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-    cache_dt = {"f8": jnp.float8_e4m3fn, "": dt}.get(run.cache_dtype, dt)
     if shp.kind == "prefill":
         inp = (jax.ShapeDtypeStruct((B, S, cfg.d_model), dt) if stub
                else jax.ShapeDtypeStruct((B, S), jnp.int32))
