@@ -1,0 +1,189 @@
+"""Train-preset benchmark — the BENCH_train.json baseline.
+
+Two sections (reduced CPU configs; relative numbers are the point, the
+file is a trajectory anchor per the ROADMAP):
+
+  presets      the canonical train presets (`single_node`, `paper_hetero`,
+               `bsp_baseline`) run end to end through the Engine: waves,
+               wall clock (simulated for BSP's straggler-gated loop),
+               steps/s, and the loss trajectory sanity (end < start).
+
+  wsp_vs_bsp   the paper's headline, measured apples to apples: the same
+               heterogeneous 4-VW fleet (per-VW slowdowns, the paper's
+               V/R/G/Q topology, network time scaled so one worker's push
+               costs about one wave) trained with WSP (D=2, async push —
+               sync hidden under the next wave's compute) vs BSP (the
+               ring all-reduce on the critical path of every wave, gated
+               by the slowest worker). Both walls price modeled network
+               seconds at the same time_scale: WSP's transport sleeps are
+               scaled by the runtime, BSP's modeled collective seconds are
+               scaled here. CI asserts hetero-WSP >= BSP steps/s.
+
+  PYTHONPATH=src python benchmarks/train_bench.py           # full sweep
+  PYTHONPATH=src python benchmarks/train_bench.py --tiny    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "BENCH_train.json")
+
+def preset_cells(waves):
+    import jax
+    import numpy as np
+
+    from repro.api import Engine, get_preset
+    from repro.core import wave
+    from repro.models import lm
+    from repro.optim import make_optimizer
+
+    # one prebuilt (params, optimizer, wave step) injected into every cell:
+    # the presets share the tiny arch, so this compiles the jitted wave step
+    # once — otherwise each cell pays its own multi-second compile inside
+    # the timed fit() and the steps/s comparison measures XLA, not sync
+    arch = get_preset("single_node").arch
+    params, _ = lm.init_params(arch, jax.random.PRNGKey(0))
+    opt = make_optimizer("sgd", 0.3)
+    step = wave.build_local_wave_step(arch, arch.num_microbatches, opt)
+
+    def engine(plan):
+        return Engine(plan, params=params, wave_step=step, optimizer=opt)
+
+    # throwaway run: jit cache, worker threads and loaders all warm
+    engine(get_preset("single_node", run__max_waves=2)).fit()
+
+    rows = []
+    for name in ("single_node", "paper_hetero", "bsp_baseline"):
+        plan = get_preset(name, **({"run__max_waves": waves} if waves
+                                   else {}))
+        t0 = time.monotonic()
+        rep = engine(plan).fit()
+        host_s = time.monotonic() - t0
+        _, loss = rep.loss_curve()
+        cell = {
+            "preset": name,
+            "backend": plan.run.backend,
+            "sync": plan.sync.describe(),
+            "num_vw": plan.cluster.num_vw,
+            "waves": rep.waves,
+            "wall_s": rep.wall_s,          # simulated for the BSP loop
+            "host_s": host_s,
+            "steps_per_s": rep.waves / rep.wall_s if rep.wall_s else 0.0,
+            "first_loss": float(loss[0]),
+            "final_loss": float(np.mean(loss[-4:])),
+        }
+        assert cell["final_loss"] < cell["first_loss"], (name, cell)
+        print(f"preset {name:14s} waves={cell['waves']} "
+              f"wall={cell['wall_s']:.2f}s "
+              f"steps/s={cell['steps_per_s']:.2f} "
+              f"loss {cell['first_loss']:.3f} -> {cell['final_loss']:.3f}")
+        rows.append(cell)
+    return rows
+
+
+NUM_VW = 4
+SLOWDOWNS = (0.02, 0.03, 0.04, 0.05)   # per-VW extra seconds/wave (hetero)
+
+
+def wsp_vs_bsp(waves):
+    """Same hetero fleet, same data, same model: WSP(D=2, async) vs BSP,
+    both walls in the same simulated-network currency."""
+    import jax
+    import numpy as np
+
+    from repro.api import BSP, ClusterSpec, Engine, Plan, RunSpec, WSP
+    from repro.core import wave
+    from repro.configs import ARCHS, reduced
+    from repro.dist.topology import make_topology
+    from repro.models import lm
+    from repro.optim import make_optimizer
+
+    cfg = reduced(ARCHS["qwen3-0.6b"], num_layers=2, d_model=32, d_ff=64,
+                  vocab_size=256, num_heads=2, num_kv_heads=2, head_dim=16,
+                  num_microbatches=2)
+    params, _ = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer("sgd", 0.3)
+    step = wave.build_local_wave_step(cfg, cfg.num_microbatches, opt)
+    push_bytes = sum(np.asarray(l).astype(np.float32).nbytes
+                     for l in jax.tree.leaves(params))
+    # one worker's push ~ half a (slowed) wave on the paper topology's
+    # slowest link: link contention between concurrent pushers roughly
+    # doubles the effective delay, landing comm ~ compute — the regime
+    # where sync placement decides throughput
+    topo = make_topology("paper", NUM_VW)
+    ref_cost = max(topo.p2p_cost(f"vw{i}", "ps", push_bytes)
+                   for i in range(NUM_VW))
+    time_scale = 0.5 * max(SLOWDOWNS) / ref_cost if ref_cost > 0 else 0.0
+
+    def fleet(sync):
+        return Plan(cluster=ClusterSpec(num_vw=NUM_VW,
+                                        topology=make_topology("paper",
+                                                               NUM_VW),
+                                        speeds=SLOWDOWNS,
+                                        time_scale=time_scale),
+                    sync=sync,
+                    run=RunSpec(max_waves=waves, batch=4, seq=32,
+                                vocab=cfg.vocab_size))
+
+    # warm the jit / worker threads before any timed cell
+    Engine(Plan(cluster=ClusterSpec(num_vw=NUM_VW), sync=WSP(D=2),
+                run=RunSpec(max_waves=2, batch=4, seq=32,
+                            vocab=cfg.vocab_size)),
+           params=params, wave_step=step, optimizer=opt).fit()
+
+    out = {"arch": cfg.name, "num_vw": NUM_VW, "slowdowns": SLOWDOWNS,
+           "time_scale": time_scale, "push_bytes": int(push_bytes),
+           "waves": waves}
+    for mode, sync in (("wsp", WSP(D=2, pull_every=4, async_push=True)),
+                       ("bsp", BSP())):
+        rep = Engine(fleet(sync), params=params, wave_step=step,
+                     optimizer=opt).fit()
+        wall = rep.wall_s
+        if mode == "bsp":
+            # the BSP loop's simulated clock prices the ring all-reduce in
+            # unscaled modeled seconds; re-price it at the fleet's
+            # time_scale so both walls speak the same currency (the WSP
+            # runtime's transport sleeps are already scaled)
+            wall += rep.comm_seconds * (time_scale - 1.0)
+        out[mode] = {
+            "wall_s": wall,
+            "waves": rep.waves,
+            "steps_per_s": rep.waves / wall if wall else 0.0,
+            "comm_seconds": rep.comm_seconds,
+            "comm_seconds_scaled": rep.comm_seconds * time_scale,
+        }
+        print(f"{mode} hetero fleet: waves={rep.waves} wall={wall:.2f}s "
+              f"steps/s={out[mode]['steps_per_s']:.2f} "
+              f"comm(scaled)={out[mode]['comm_seconds_scaled']:.2f}s")
+    out["wsp_over_bsp"] = (out["wsp"]["steps_per_s"]
+                           / out["bsp"]["steps_per_s"]
+                           if out["bsp"]["steps_per_s"] else 0.0)
+    print(f"hetero WSP/BSP throughput: {out['wsp_over_bsp']:.2f}x")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer waves")
+    ap.add_argument("--out", default=OUT)
+    a = ap.parse_args(argv)
+
+    cells = preset_cells(8 if a.tiny else 0)   # 0 -> each preset's default
+    doc = {"meta": {"mode": "tiny" if a.tiny else "full",
+                    "note": "reduced CPU configs; trajectory anchor, not "
+                            "absolute hardware numbers; BSP wall clock is "
+                            "the simulated straggler-gated time"},
+           "presets": cells,
+           "wsp_vs_bsp": wsp_vs_bsp(12 if a.tiny else 16)}
+    with open(a.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

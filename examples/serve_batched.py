@@ -32,4 +32,9 @@ for arch in ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b"):
 # continuous batching: 6 requests through 2 decode slots
 run(["--arch", "qwen3-0.6b", "--requests", "6", "--batch", "2",
      "--prompt-len", "16", "--gen", "8"])
+
+# paged KV: 4-token pages, pool below the worst case, deadline admission
+run(["--arch", "qwen3-0.6b", "--requests", "6", "--batch", "2",
+     "--prompt-len", "16", "--gen", "8", "--page-size", "4",
+     "--max-pages", "10", "--policy", "deadline"])
 print("OK")

@@ -74,6 +74,7 @@ class Engine:
         self._step_ctx = None      # lazy state for step()
         self._spmd = None          # lazy state for the spmd backend
         self._serve = None         # lazy state for the serve surface
+        self._serve_paged = None   # lazy paged (CacheStore) serve executors
         self._step_offset = 0      # waves already in a restored checkpoint
         self._fleet_ran = False    # the threaded fleet is single-shot
         self._bsp_wave = 0         # waves the BSP loop has run (this engine)
@@ -351,6 +352,80 @@ class Engine:
                        "pspecs": pspecs, "cache_sharding": csh,
                        "cache_dt": cache_dt}
 
+    def _ensure_serve_store(self):
+        """Build the paged (CacheStore-backed) serve executors: a variable-
+        length prefill that scatters K/V pages through the block table, and
+        a per-row-position decode over the paged tree. Compiled separately
+        from the aligned generate() path (which keeps the contiguous
+        reference layout)."""
+        if getattr(self, "_serve_paged", None) is not None:
+            return
+        from repro.serve import cache as cache_lib
+        self._ensure_serve()
+        plan, run, sv = self.plan, self.plan.run, self.plan.serve
+        st = self._serve
+        cfg = st["cfg"]
+        layout = cache_lib.make_layout(sv.max_batch, sv.max_len,
+                                       page_size=sv.page_size,
+                                       max_pages=sv.max_pages)
+
+        if st["mode"] != "spmd":
+            pre_fn, dec_fn = _ref_paged_steps(cfg)
+            self._serve_paged = {"layout": layout, "shardings": None,
+                                 "prefill": jax.jit(pre_fn),
+                                 "decode": jax.jit(dec_fn)}
+            return
+
+        from repro.compat import set_mesh
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.core import wave
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = st["mesh"]
+        common = dict(arch=cfg, optimizer=run.optimizer, lr=run.lr,
+                      weight_decay=run.weight_decay,
+                      compute_dtype=run.compute_dtype,
+                      cache_dtype=sv.cache_dtype, overlap=run.overlap)
+        rc_pre = RunConfig(shape=ShapeConfig("serve_prefill", sv.prompt_len,
+                                             sv.max_batch, "prefill"),
+                           **common)
+        rc_dec = RunConfig(shape=ShapeConfig("serve_decode", sv.max_len,
+                                             sv.max_batch, "decode"),
+                           **common)
+        pre_step, _, _ = wave.build_prefill_step(rc_pre, mesh, layout=layout,
+                                                 var_len=True)
+        dec_step, _, cspecs = wave.build_decode_step(rc_dec, mesh,
+                                                     pos_per_row=True,
+                                                     layout=layout)
+        with set_mesh(mesh):
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cspecs,
+                is_leaf=lambda x: isinstance(x, P))
+
+        def pre_fn(params, inputs, lens, cache):
+            return pre_step(params, {"inputs": inputs, "cache": cache,
+                                     "lens": lens})
+
+        def dec_fn(params, inputs, cache, pos):
+            return dec_step(params, {"inputs": inputs, "cache": cache,
+                                     "pos": pos})
+
+        self._serve_paged = {"layout": layout, "shardings": shardings,
+                             "prefill": jax.jit(pre_fn),
+                             "decode": jax.jit(dec_fn)}
+
+    def serve_store(self):
+        """A fresh CacheStore (empty page pool + per-slot state) for this
+        Plan's serve shapes, placed for its backend. The Scheduler
+        allocates pages at admission and frees them at retirement."""
+        from repro.serve import cache as cache_lib
+        self._require_serve("serve_store")
+        self._ensure_serve_store()
+        st, pg = self._serve, self._serve_paged
+        return cache_lib.CacheStore(st["cfg"], pg["layout"],
+                                    dtype=st["cache_dt"],
+                                    shardings=pg["shardings"])
+
     def serve_cache(self):
         """A blank (all-slots-empty) serve cache for max_batch requests of
         up to serve.max_len positions, placed for this Plan's backend."""
@@ -385,20 +460,62 @@ class Engine:
                                       self.serve_cache())
         return logits[:, -1], cache
 
+    def prefill_into(self, store, prompts, lens, slots):
+        """Prefill a batch of (possibly variable-length, right-padded)
+        prompts directly into `store`'s page pool.
+
+        prompts [max_batch, prompt_len] token ids with rows 0..len(slots)-1
+        carrying real requests; lens [max_batch] per-row prompt lengths;
+        slots the store slot assigned to each live row. K/V pages scatter
+        through the block table in place; freshly computed per-slot state
+        (ring buffers, SSM/RWKV state) is adopted into the assigned slots.
+        Returns each live row's last-real-position logits [max_batch,
+        vocab]."""
+        import jax.numpy as jnp
+        from repro.serve.cache import CacheStore
+        self._require_serve("prefill_into")
+        self._ensure_serve_store()
+        if not isinstance(store, CacheStore):
+            raise TypeError(f"prefill_into writes a CacheStore, got "
+                            f"{type(store).__name__}")
+        st, pg, sv = self._serve, self._serve_paged, self.plan.serve
+        prompts = jnp.asarray(prompts)
+        if prompts.shape[:2] != (sv.max_batch, sv.prompt_len):
+            raise ValueError(
+                f"prompts {prompts.shape} disagree with the frozen serve "
+                f"shapes [{sv.max_batch}, {sv.prompt_len}] (pad short "
+                f"prompts on the right; lens carries the real lengths)")
+        lens = jnp.asarray(lens, jnp.int32)
+        logits, out = pg["prefill"](st["params"], prompts, lens,
+                                    store.prefill_input(slots))
+        store.append_rows(out, [(j, s) for j, s in enumerate(slots)])
+        return logits[:, -1]
+
     def decode(self, tokens, cache, pos):
         """One decode position for the whole batch.
 
         tokens [B, 1] ids (or [B, 1, d] embeddings); pos a scalar (aligned
         batch) or [B] vector (continuous batching: each row at its own
-        depth). Returns (logits [B, vocab], cache)."""
+        depth); cache the contiguous tree from prefill() — or a CacheStore,
+        which routes through the paged decode step and is updated in
+        place. Returns (logits [B, vocab], cache)."""
         import jax.numpy as jnp
+        from repro.serve.cache import CacheStore
         self._require_serve("decode")
-        self._ensure_serve()
-        st, sv = self._serve, self.plan.serve
+        sv = self.plan.serve
         pos = jnp.asarray(pos, jnp.int32)
         if pos.ndim == 0:
             # one trace serves both aligned and per-row decode
             pos = jnp.broadcast_to(pos, (sv.max_batch,))
+        if isinstance(cache, CacheStore):
+            self._ensure_serve_store()
+            st, pg = self._serve, self._serve_paged
+            logits, out = pg["decode"](st["params"], jnp.asarray(tokens),
+                                       cache.tree, pos)
+            cache.update(out)
+            return logits[:, -1], cache
+        self._ensure_serve()
+        st = self._serve
         logits, cache = st["decode"](st["params"], jnp.asarray(tokens),
                                      cache, pos)
         return logits[:, -1], cache
@@ -744,6 +861,28 @@ def _ref_serve_steps(cfg):
         hid, cache, _ = lm.forward_ref(cfg, params, prompts, mode="prefill",
                                        cache=cache)
         return lm.logits_ref(cfg, params, hid[:, -1:]), cache
+
+    def dec_fn(params, tokens, cache, pos):
+        hid, cache, _ = lm.forward_ref(cfg, params, tokens, mode="decode",
+                                       cache=cache, pos=pos)
+        return lm.logits_ref(cfg, params, hid), cache
+
+    return pre_fn, dec_fn
+
+
+def _ref_paged_steps(cfg):
+    """forward_ref over the paged cache tree (threads backend): variable-
+    length prefill through the block table + per-row-position decode."""
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    def pre_fn(params, prompts, lens, cache):
+        hid, cache, _ = lm.forward_ref(cfg, params, prompts, mode="prefill",
+                                       cache=cache, lens=lens)
+        last = jnp.take_along_axis(
+            hid, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
+        return lm.logits_ref(cfg, params, last), cache
 
     def dec_fn(params, tokens, cache, pos):
         hid, cache, _ = lm.forward_ref(cfg, params, tokens, mode="decode",

@@ -93,10 +93,19 @@ class RunSpec:
 class ServeSpec:
     """Frozen serving shapes and sampling for a serve-mode Plan.
 
-    Serving runs batched prefill over `max_batch` prompts of `prompt_len`
-    tokens, then `gen` autoregressive decode positions against a cache of
-    `max_len = prompt_len + gen` slots. temperature 0 is greedy argmax;
-    temperature > 0 samples categorically (seeded by sample_seed)."""
+    Serving runs batched prefill over `max_batch` prompts of up to
+    `prompt_len` tokens, then up to `gen` autoregressive decode positions
+    against a cache of `max_len = prompt_len + gen` logical slots.
+    temperature 0 is greedy argmax; temperature > 0 samples categorically
+    (seeded by sample_seed).
+
+    The Scheduler's full-attention KV lives in a paged pool
+    (repro.serve.cache): `page_size` tokens per page (0 -> max_len, the
+    contiguous degenerate: one page per slot) drawn from a pool of
+    `max_pages` physical pages (0 -> the worst case max_batch *
+    ceil(max_len / page_size)); each request allocates only the pages its
+    own prompt + budget needs, and admission is refused while the pool is
+    exhausted."""
 
     prompt_len: int = 24
     gen: int = 16
@@ -104,6 +113,8 @@ class ServeSpec:
     temperature: float = 0.0
     sample_seed: int = 0
     cache_dtype: str = ""           # "" -> run.compute_dtype; "f8" -> fp8 KV
+    page_size: int = 0              # KV page tokens; 0 -> max_len (1 pg/slot)
+    max_pages: int = 0              # pool size; 0 -> worst-case B * pages/slot
 
     @property
     def max_len(self) -> int:
@@ -301,6 +312,13 @@ class Plan:
             raise ValueError(f"unknown serve cache_dtype "
                              f"{sv.cache_dtype!r}; expected '' (compute "
                              f"dtype) or 'f8'")
+        if sv.page_size < 0 or sv.max_pages < 0:
+            raise ValueError(f"page_size={sv.page_size} and "
+                             f"max_pages={sv.max_pages} must be >= 0 "
+                             f"(0 defers to the contiguous worst case)")
+        from repro.serve.cache import make_layout
+        make_layout(sv.max_batch, sv.max_len, page_size=sv.page_size,
+                    max_pages=sv.max_pages)     # geometry errors surface now
         if self.shape is not None:
             raise ValueError("serve shapes (prefill/decode/max batch) are "
                              "frozen in Plan.serve; drop Plan.shape")

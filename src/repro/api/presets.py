@@ -125,6 +125,16 @@ def serve_spmd() -> Plan:
                 run=RunSpec(backend="spmd"))
 
 
+@preset("serve_paged")
+def serve_paged() -> Plan:
+    """Paged-KV continuous batching: 4-token pages from a pool sized
+    below the worst case — variable-length prompts and per-request
+    budgets allocate only what they need (repro.api.serving Scheduler)."""
+    return Plan(arch=_tiny_arch(),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4,
+                                page_size=4, max_pages=12))
+
+
 def main(argv=None):
     import argparse
 
@@ -145,8 +155,30 @@ def main(argv=None):
                                 else {}))
     print(plan.describe())
     if plan.serve is not None:
-        rep = Engine(plan).generate()
         sv = plan.serve
+        if sv.page_size:
+            # paged presets demo the continuous-batching Scheduler with
+            # mixed prompt lengths and budgets (the paged pool's point)
+            from repro.api.serving import Request, Scheduler
+            rng = np.random.default_rng(0)
+            reqs = [Request(rid=i,
+                            prompt=rng.integers(
+                                0, plan.arch.vocab_size,
+                                int(rng.integers(2, sv.prompt_len + 1)),
+                                dtype=np.int32),
+                            max_new_tokens=int(rng.integers(1, sv.gen + 1)))
+                    for i in range(2 * sv.max_batch)]
+            rep = Scheduler(Engine(plan)).run(reqs)
+            assert rep.tokens_out == sum(r.max_new_tokens for r in reqs)
+            pu = rep.page_utilization()
+            print(f"requests={len(reqs)} tokens={rep.tokens_out} "
+                  f"pages={rep.peak_pages}/{rep.pages_total}"
+                  f"(x{rep.page_size} tok) "
+                  f"util={0.0 if pu is None else pu:.2f} "
+                  f"throughput={rep.tokens_per_s():.1f} tok/s")
+            print("OK")
+            return 0
+        rep = Engine(plan).generate()
         assert rep.tokens.shape == (sv.max_batch, sv.gen), rep.tokens.shape
         print(f"batch={sv.max_batch} prefill({sv.prompt_len} tok)="
               f"{rep.prefill_s*1e3:.1f}ms decode={rep.ms_per_token():.1f}"

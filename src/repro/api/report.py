@@ -80,6 +80,12 @@ class ServeReport:
     slot_steps: int = 0         # sum over decode steps of active slots
     max_batch: int = 0
     wall_s: float = 0.0
+    # paged-cache accounting (Scheduler runs; zeros for aligned generate())
+    page_size: int = 0          # tokens per KV page
+    pages_total: int = 0        # physical pages in the pool
+    peak_pages: int = 0         # high-water mark of pages in use
+    page_steps: int = 0         # sum over decode steps of pages in use
+    admit_blocked: int = 0      # admission rounds refused: pool exhausted
 
     @property
     def tokens_out(self) -> int:
@@ -102,3 +108,10 @@ class ServeReport:
         if not self.decode_steps or not self.max_batch or not self.requests:
             return None
         return self.slot_steps / (self.decode_steps * self.max_batch)
+
+    def page_utilization(self) -> Optional[float]:
+        """Mean fraction of the KV page pool in use across decode steps
+        (scheduler runs only; None for aligned-batch generate())."""
+        if not self.decode_steps or not self.pages_total:
+            return None
+        return self.page_steps / (self.decode_steps * self.pages_total)

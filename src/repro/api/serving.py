@@ -1,25 +1,33 @@
 """Continuous-batching request scheduler over the Engine's serve surface.
 
-The Engine's generate() runs one aligned batch: every slot prefetches and
-retires together. Real traffic is ragged — requests arrive while a decode
-batch is in flight and finish at different depths. The Scheduler closes
-that gap with the standard continuous-batching loop:
+The Engine's generate() runs one aligned batch: every slot prefills and
+retires together. Real traffic is ragged — requests arrive with different
+prompt lengths and budgets, and finish at different depths. The Scheduler
+closes that gap with the standard continuous-batching loop, built on the
+paged cache subsystem (repro.serve.cache):
 
-  admit   pop queued requests into free batch slots: one padded prefill
-          call computes their caches, whose rows are copied into the
-          assigned slots (whole-row adoption also clears any stale state
-          left by the slot's previous occupant)
+  admit   pop queued requests into free batch slots — each admission
+          allocates exactly the KV pages its prompt + generation budget
+          needs from the CacheStore pool (no worst-case reservation) and
+          is *refused* while the pool is exhausted; one variable-length
+          prefill call (right-padded prompts + a per-row length vector)
+          scatters K/V straight into the allocated pages and adopts the
+          per-slot ring/SSM state into the assigned slots
   decode  one jitted decode call advances every active slot by one token;
           slots sit at different depths, carried by the per-row position
-          vector (core.wave pos_per_row / forward_ref vector pos)
-  retire  finished sequences free their slots for the next admission
+          vector (core.wave pos_per_row / forward_ref vector pos), and
+          full-attention K/V is read through each slot's block table
+  retire  finished sequences free their pages and slots
 
-Requests are admitted strictly FIFO, so no request starves: each admission
-takes the longest-waiting request first. Per-request token picks are keyed
-by (sample_seed, rid, k), so a request's output is independent of which
-neighbors it was co-batched with — bit-identical across schedules for the
-dense/attention-free families (MoE capacity routing is batch-coupled by
-construction).
+Admission policy: "fifo" (default) admits strictly in arrival order, so no
+request starves. "deadline" orders the admit queue by slack — a request's
+`deadline` (in decode steps) minus the current step minus the tokens it
+still needs — with FIFO order among slack ties (requests without a
+deadline have infinite slack and never preempt each other's arrival
+order). Per-request token picks are keyed by (sample_seed, rid, k), so a
+request's output is independent of which neighbors it was co-batched with
+— bit-identical across schedules for the dense/attention-free families
+(MoE capacity routing is batch-coupled by construction).
 
     from repro.api import Engine, get_preset
     from repro.api.serving import Request, Scheduler
@@ -30,7 +38,6 @@ construction).
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass
 from typing import Any
 
@@ -40,16 +47,20 @@ import numpy as np
 from repro.api.engine import Engine
 from repro.api.report import RequestStats, ServeReport
 
+POLICIES = ("fifo", "deadline")
+
 
 @dataclass
 class Request:
-    """One serving request: a prompt of exactly serve.prompt_len token ids
-    and an optional per-request generation budget (0 -> serve.gen; the
-    cache is sized for at most serve.gen new tokens)."""
+    """One serving request: a prompt of at most serve.prompt_len token
+    ids, an optional per-request generation budget (0 -> serve.gen), and
+    an optional deadline in decode steps (0 -> none; consulted by the
+    Scheduler's "deadline" admission policy)."""
 
     rid: int
-    prompt: Any                 # [prompt_len] token ids
+    prompt: Any                 # [<= prompt_len] token ids
     max_new_tokens: int = 0
+    deadline: int = 0
 
 
 class _Slot:
@@ -63,19 +74,8 @@ class _Slot:
         self.t_admit = t_admit
 
 
-def _adopt_slots(cache, fresh, pairs):
-    """Copy freshly prefilled cache rows into their assigned batch slots —
-    one gather/scatter per leaf for the whole admission group. Every cache
-    leaf carries the batch at dim 1; whole-row replacement also clears any
-    stale KV / ring-buffer / SSM state from the slot's previous occupant."""
-    srcs = np.array([s for s, _ in pairs])
-    dsts = np.array([d for _, d in pairs])
-    return jax.tree.map(lambda big, f: big.at[:, dsts].set(f[:, srcs]),
-                        cache, fresh)
-
-
 class Scheduler:
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, *, policy: str = "fifo"):
         plan = engine.plan
         if plan.serve is None:
             raise ValueError("the Scheduler drives serve Plans; Plan.serve "
@@ -86,8 +86,12 @@ class Scheduler:
                 f"are precomputed embeddings, not token ids); the request "
                 f"scheduler feeds generated ids back — serve it through "
                 f"Engine.generate() instead")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"expected one of {POLICIES}")
         self.engine = engine
         self.sv = plan.serve
+        self.policy = policy
 
     # ------------------------------------------------------------------
     def _pick_one(self, row, rid: int, k: int, key) -> int:
@@ -99,30 +103,51 @@ class Scheduler:
         return int(jax.random.categorical(
             rk, np.asarray(row, np.float32) / self.sv.temperature))
 
+    def _limit(self, r: Request) -> int:
+        return r.max_new_tokens or self.sv.gen
+
+    def _admit_order(self, queue, step):
+        """Indices into `queue` in admission order. FIFO admits in arrival
+        order; the deadline policy sorts by slack (deadline - step -
+        tokens still needed) but the sort is stable, so requests with
+        equal slack — including every request without a deadline — keep
+        strict FIFO order among themselves (no starvation)."""
+        if self.policy == "fifo":
+            return list(range(len(queue)))
+        def slack(r):
+            return (r.deadline - step - self._limit(r)) if r.deadline \
+                else float("inf")
+        return sorted(range(len(queue)), key=lambda i: slack(queue[i]))
+
     def run(self, requests, *, callback=None) -> ServeReport:
-        """Serve `requests` (admitted FIFO) to completion. `callback(step,
-        active_slots)` fires after every batched decode step."""
+        """Serve `requests` to completion. `callback(step, active_slots)`
+        fires after every batched decode step."""
         eng, sv = self.engine, self.sv
         B, P = sv.max_batch, sv.prompt_len
         plan = eng.plan
         key = jax.random.PRNGKey(sv.sample_seed)
-        queue = deque(requests)
-        for r in queue:
-            prompt = np.asarray(r.prompt)
-            if prompt.shape != (P,):
+        queue = [(np.asarray(r.prompt), r) for r in requests]
+        for prompt, r in queue:
+            if prompt.ndim != 1 or not 1 <= prompt.shape[0] <= P:
                 raise ValueError(
-                    f"request {r.rid}: prompt shape {prompt.shape} != "
-                    f"({P},); serve shapes are frozen in the Plan "
-                    f"(ServeSpec.prompt_len)")
+                    f"request {r.rid}: prompt shape {prompt.shape} must be "
+                    f"[1..{P}] token ids; the compiled prefill width is "
+                    f"frozen in the Plan (ServeSpec.prompt_len) but shorter "
+                    f"prompts are right-padded and allocate only their own "
+                    f"pages")
             if not 0 <= r.max_new_tokens <= sv.gen:
                 raise ValueError(
                     f"request {r.rid}: max_new_tokens={r.max_new_tokens} "
                     f"must be in [0 (= the ServeSpec default), "
-                    f"ServeSpec.gen={sv.gen}] — the cache is sized for "
-                    f"gen new tokens")
+                    f"ServeSpec.gen={sv.gen}] — slots allocate pages for "
+                    f"at most prompt + gen positions")
+            if r.deadline < 0:
+                raise ValueError(f"request {r.rid}: deadline must be >= 0 "
+                                 f"(0 = none), got {r.deadline}")
+        store = eng.serve_store()
         report = ServeReport(arch=plan.arch.name, backend=plan.run.backend,
-                             max_batch=B)
-        cache = eng.serve_cache()
+                             max_batch=B, page_size=store.layout.page_size,
+                             pages_total=store.pages_total)
         active: dict[int, _Slot] = {}
         free = list(range(B))
         step = 0
@@ -132,37 +157,57 @@ class Scheduler:
             slot.stats.finished_step = step
             slot.stats.latency_s = time.monotonic() - slot.t_admit
             report.requests.append(slot.stats)
+            store.free(s)
             free.append(s)
             free.sort()
 
         while queue or active:
-            # ---- admit: longest-waiting requests into the lowest slots --
+            # ---- admit: policy order into the lowest slots, page-gated --
             if free and queue:
                 admits = []
-                while free and queue:
-                    admits.append((queue.popleft(), free.pop(0)))
-                prompts = np.zeros((B, P), np.int32)
-                for j, (r, _) in enumerate(admits):
-                    prompts[j] = np.asarray(r.prompt)
-                t0 = time.monotonic()
-                logits, fresh = eng.prefill(prompts)
-                logits = np.asarray(logits)
-                dt = time.monotonic() - t0
-                report.prefill_s += dt
-                cache = _adopt_slots(cache, fresh,
-                                     [(j, s) for j, (_, s) in
-                                      enumerate(admits)])
-                for j, (r, s) in enumerate(admits):
-                    tok = self._pick_one(logits[j], r.rid, 0, key)
-                    stats = RequestStats(rid=r.rid, prompt_len=P,
-                                         tokens=[tok], admitted_step=step,
-                                         slot=s, prefill_s=dt)
-                    slot = _Slot(r, stats, r.max_new_tokens or sv.gen,
-                                 next_pos=P, last_tok=tok, t_admit=t0)
-                    if len(stats.tokens) >= slot.limit:
-                        retire(s, slot)
-                    else:
-                        active[s] = slot
+                order = self._admit_order([r for _, r in queue], step)
+                taken = []
+                for qi in order:
+                    if not free:
+                        break
+                    prompt, r = queue[qi]
+                    need = prompt.shape[0] + self._limit(r)
+                    if not store.can_alloc(need):
+                        # pool exhausted: stop admitting rather than
+                        # over-reserving; retirements will free pages
+                        report.admit_blocked += 1
+                        break
+                    s = free.pop(0)
+                    store.alloc(s, need)
+                    taken.append(qi)
+                    admits.append((r, prompt, s))
+                for qi in sorted(taken, reverse=True):
+                    del queue[qi]
+                if admits:
+                    prompts = np.zeros((B, P), np.int32)
+                    lens = np.ones(B, np.int32)
+                    for j, (r, prompt, _) in enumerate(admits):
+                        prompts[j, :prompt.shape[0]] = prompt
+                        lens[j] = prompt.shape[0]
+                    t0 = time.monotonic()
+                    logits = np.asarray(eng.prefill_into(
+                        store, prompts, lens, [s for _, _, s in admits]))
+                    dt = time.monotonic() - t0
+                    report.prefill_s += dt
+                    for j, (r, prompt, s) in enumerate(admits):
+                        tok = self._pick_one(logits[j], r.rid, 0, key)
+                        stats = RequestStats(rid=r.rid,
+                                             prompt_len=prompt.shape[0],
+                                             tokens=[tok],
+                                             admitted_step=step,
+                                             slot=s, prefill_s=dt)
+                        slot = _Slot(r, stats, self._limit(r),
+                                     next_pos=prompt.shape[0], last_tok=tok,
+                                     t_admit=t0)
+                        if len(stats.tokens) >= slot.limit:
+                            retire(s, slot)
+                        else:
+                            active[s] = slot
             if not active:
                 continue
             # ---- one batched decode step over every active slot ---------
@@ -172,11 +217,12 @@ class Scheduler:
                 toks[s, 0] = slot.last_tok
                 pos[s] = slot.next_pos
             t0 = time.monotonic()
-            logits, cache = eng.decode(toks, cache, pos)
+            logits, _ = eng.decode(toks, store, pos)
             logits = np.asarray(logits)
             report.decode_s += time.monotonic() - t0
             report.decode_steps += 1
             report.slot_steps += len(active)
+            report.page_steps += store.pages_in_use
             step += 1
             # ---- advance / retire --------------------------------------
             for s in sorted(active):
@@ -192,6 +238,7 @@ class Scheduler:
             if callback is not None:
                 callback(step, len(active))
         report.wall_s = time.monotonic() - t_start
+        report.peak_pages = store.peak_pages
         report.requests.sort(key=lambda r: r.rid)
         return report
 

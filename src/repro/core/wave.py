@@ -31,6 +31,7 @@ from repro.models import lm
 from repro.models.blocks import LayerCtx, apply_layer
 from repro.models.layers import chunked_cross_entropy
 from repro.optim import make_optimizer
+from repro.serve import cache as cache_lib
 
 S_AX, T_AX, D_AX = "stage", "tp", "data"
 
@@ -42,22 +43,6 @@ def dp_axes(mesh: Mesh):
 def n_dp(mesh: Mesh) -> int:
     axes = dp_axes(mesh)
     return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
-
-
-# ----------------------------------------------------------------------------
-# cache microbatch slicing (batch at dim 1 of every cache leaf)
-# ----------------------------------------------------------------------------
-def _cache_slice_mb(cache, j, mb):
-    return jax.tree.map(
-        lambda a: jax.lax.dynamic_slice_in_dim(a, j * mb, mb, axis=1), cache)
-
-
-def _cache_update_mb(cache, new_rows, j, mb, valid):
-    def upd(a, n):
-        old = jax.lax.dynamic_slice_in_dim(a, j * mb, mb, axis=1)
-        n = jnp.where(valid, n.astype(a.dtype), old)
-        return jax.lax.dynamic_update_slice_in_dim(a, n, j * mb, axis=1)
-    return jax.tree.map(upd, cache, new_rows)
 
 
 # ----------------------------------------------------------------------------
@@ -85,7 +70,7 @@ def _stage_apply(cfg, blocks_local, x, meta_arrs, ctx: LayerCtx, cache_local):
 
 
 def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
-                  mode: str, nm: int, cache_local=None, pos=None,
+                  mode: str, nm: int, cache_local=None, pos=None, lens=None,
                   tp_axis: Optional[str], merge_axis: Optional[str],
                   seq_offset=0, remat: bool = False, overlap: bool = False):
     """x_local [Bl, S, d] (this VW's wave batch). Returns (y [Bl,S,d] — valid
@@ -114,10 +99,10 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
     ticks = nm + skew * (stages - 1)
     perm = [(i, i + 1) for i in range(stages - 1)]
 
-    def stage_call(x_in, cache_mb, tick_valid, pos_):
+    def stage_call(x_in, cache_mb, tick_valid, pos_, lens_=None):
         ctx = LayerCtx(mode=mode, pos=pos_, tp_axis=tp_axis,
                        merge_axis=merge_axis, seq_offset=seq_offset,
-                       valid=tick_valid)
+                       valid=tick_valid, lens=lens_)
         return _stage_apply(cfg, blocks_local, x_in, meta_arrs, ctx, cache_mb)
 
     stage_fn = jax.checkpoint(stage_call) if (remat and mode == "train") \
@@ -134,21 +119,25 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
         mb_c = jnp.clip(mb_idx, 0, nm - 1)
         x_fresh = jax.lax.dynamic_index_in_dim(x_wave, mb_c, 0, keepdims=False)
         x_in = jnp.where(si == 0, x_fresh, buf_in)
-        # per-row decode positions ([Bl] vector) slice with the microbatch,
-        # like the cache; a scalar pos is shared by every row
+        # per-row decode positions / prompt lengths ([Bl] vectors) slice
+        # with the microbatch, like the cache; a scalar pos is shared
         pos_mb = (jax.lax.dynamic_slice_in_dim(pos, mb_c * mb, mb)
                   if pos is not None and jnp.ndim(pos) == 1 else pos)
+        lens_mb = (jax.lax.dynamic_slice_in_dim(lens, mb_c * mb, mb)
+                   if lens is not None else None)
         if cache_c is None:
-            y, _, aux_t = stage_fn(x_in, None, valid, pos_=pos_mb)
+            y, _, aux_t = stage_fn(x_in, None, valid, pos_=pos_mb,
+                                   lens_=lens_mb)
         else:
             # serve path (no AD): bubble ticks skip the cache read/write and
             # the stage compute entirely — otherwise every dead tick pays the
             # full cache-slice HBM traffic ((nm+k-1)/nm x minimal bytes;
             # measured 2.9x for decode_32k at nm=8 — EXPERIMENTS.md §Perf)
             def live(cc):
-                cm = _cache_slice_mb(cc, mb_c, mb)
-                y_, new_cm, a_ = stage_fn(x_in, cm, valid, pos_=pos_mb)
-                cc = _cache_update_mb(cc, new_cm, mb_c, mb, valid)
+                cm = cache_lib.slice_mb(cc, mb_c, mb)
+                y_, new_cm, a_ = stage_fn(x_in, cm, valid, pos_=pos_mb,
+                                          lens_=lens_mb)
+                cc = cache_lib.update_mb(cc, new_cm, mb_c, mb, valid)
                 return cc, y_, a_
 
             def dead(cc):
@@ -296,29 +285,40 @@ def _serve_nm(run: RunConfig, mesh) -> tuple[int, int]:
 
 
 def build_decode_step(run: RunConfig, mesh: Mesh, *,
-                      pos_per_row: bool = False):
+                      pos_per_row: bool = False, layout=None):
     """step(params, batch{'inputs','cache','pos'}) -> (logits, cache).
 
     pos_per_row=True: batch['pos'] is a [B] vector — each batch row decodes
     at its own depth (continuous batching; rows at different generation
     depths share one jitted step). Requires an unsharded batch (data=1);
-    the default scalar pos is the aligned-batch fast path."""
+    the default scalar pos is the aligned-batch fast path.
+
+    layout: a repro.serve.cache.PageLayout — the cache pytree is the paged
+    pool + block table instead of the contiguous block (full-attention K/V
+    read through the table; the pool rides the pipeline scan whole)."""
     cfg, shp = run.arch, run.shape
     nm, _ = _serve_nm(run, mesh)
     meta_arrs, meta_specs = _meta_tree(cfg)
     pspecs = lm.param_specs(cfg)
     tp_axis = T_AX if cfg.tp > 1 else None
-    seq_sharded = shp.global_batch < 16 and D_AX in mesh.axis_names
+    seq_sharded = (layout is None and shp.global_batch < 16
+                   and D_AX in mesh.axis_names)
     merge_axis = D_AX if seq_sharded else None
     cdt, cache_dt = lm.serve_dtypes(run.compute_dtype, run.cache_dtype)
-    _, cspecs = lm.cache_struct(cfg, shp.global_batch, shp.seq_len,
-                                seq_shards=16 if seq_sharded else 1,
-                                dtype=cache_dt)
+    if layout is not None:
+        _, cspecs = cache_lib.paged_struct(cfg, layout, dtype=cache_dt)
+    else:
+        _, cspecs = cache_lib.cache_struct(
+            cfg, shp.global_batch, shp.seq_len,
+            seq_shards=16 if seq_sharded else 1, dtype=cache_dt)
     dp = dp_axes(mesh) if not seq_sharded else ()
     nd = mesh.shape[D_AX] if D_AX in mesh.axis_names else 1
     if pos_per_row and n_dp(mesh) != 1:
         raise ValueError("pos_per_row decode needs the whole batch on every "
                          "data shard; use a data=1 mesh")
+    if layout is not None and n_dp(mesh) != 1:
+        raise ValueError("the paged pool is shared by the whole batch; "
+                         "paged decode needs a data=1 mesh")
     pos_spec = P(None) if pos_per_row else P()
 
     def body(blocks, x, meta, cache, pos):
@@ -348,39 +348,68 @@ def build_decode_step(run: RunConfig, mesh: Mesh, *,
     return decode_step, pspecs, cspecs
 
 
-def build_prefill_step(run: RunConfig, mesh: Mesh, *, cache_len: int = 0):
-    """step(params, batch{'inputs','cache'}) -> (last_logits, cache).
+def build_prefill_step(run: RunConfig, mesh: Mesh, *, cache_len: int = 0,
+                       layout=None, var_len: bool = False):
+    """step(params, batch{'inputs','cache'[,'lens']}) -> (last_logits, cache).
 
     cache_len > shp.seq_len sizes the cache for the decode phase that
     follows prefill (serve: prompt_len inputs, prompt_len + gen cache slots;
-    the prefill write zero-pads the unwritten tail)."""
+    the prefill write zero-pads the unwritten tail).
+
+    layout: PageLayout — prefill scatters K/V page-granularly through
+    batch['cache']'s block table instead of filling contiguous rows.
+    var_len=True: batch['lens'] is a [B] vector of per-row prompt lengths
+    (right-padded prompts); cache writes stop at each row's length and the
+    returned logits are each row's *last real* position."""
     cfg, shp = run.arch, run.shape
     nm, _ = _serve_nm(run, mesh)
     meta_arrs, meta_specs = _meta_tree(cfg)
     pspecs = lm.param_specs(cfg)
     tp_axis = T_AX if cfg.tp > 1 else None
     cdt, cache_dt = lm.serve_dtypes(run.compute_dtype, run.cache_dtype)
-    _, cspecs = lm.cache_struct(cfg, shp.global_batch,
-                                cache_len or shp.seq_len, dtype=cache_dt)
+    if layout is not None:
+        _, cspecs = cache_lib.paged_struct(cfg, layout, dtype=cache_dt)
+    else:
+        _, cspecs = cache_lib.cache_struct(cfg, shp.global_batch,
+                                           cache_len or shp.seq_len,
+                                           dtype=cache_dt)
+    if (layout is not None or var_len) and n_dp(mesh) != 1:
+        # mirrors build_decode_step: the paged pool (and the per-row lens
+        # vector) address the whole batch; a data-sharded x would pair
+        # shard-local rows with global lens/table rows silently
+        raise ValueError("paged / variable-length prefill needs the whole "
+                         "batch on every data shard; use a data=1 mesh")
     dp = dp_axes(mesh)
 
-    def body(blocks, x, meta, cache):
+    def body(blocks, x, meta, cache, lens=None):
         y, cache, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="prefill", nm=nm, cache_local=cache,
-            pos=None, tp_axis=tp_axis, merge_axis=None, overlap=run.overlap)
-        return _bcast_from_last(y[:, -1:], cfg.stages), cache, aux
+            pos=None, lens=lens, tp_axis=tp_axis, merge_axis=None,
+            overlap=run.overlap)
+        if lens is None:
+            last = y[:, -1:]
+        else:
+            last = jnp.take_along_axis(
+                y, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
+        return _bcast_from_last(last, cfg.stages), cache, aux
 
+    in_specs = [pspecs["blocks"], P(dp, None, None), meta_specs, cspecs]
+    if var_len:
+        in_specs.append(P(None))
     pipe = shard_map(
         body, mesh=mesh,
-        in_specs=(pspecs["blocks"], P(dp, None, None), meta_specs, cspecs),
+        in_specs=tuple(in_specs),
         out_specs=(P(dp, None, None), cspecs, P()),
         check_vma=False,
     )
 
     def prefill_step(params, batch):
         x = lm.embed_tokens(cfg, params, batch["inputs"]).astype(cdt)
-        last_hid, cache, _ = pipe(_cast_tree(params["blocks"], cdt), x,
-                                  meta_arrs, batch["cache"])
+        args = (_cast_tree(params["blocks"], cdt), x, meta_arrs,
+                batch["cache"])
+        if var_len:
+            args += (batch["lens"],)
+        last_hid, cache, _ = pipe(*args)
         logits = lm.logits_ref(cfg, params, last_hid)
         return logits, cache
 

@@ -42,6 +42,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--requests", type=int, default=0,
                     help="serve N requests through the continuous-batching "
                          "scheduler instead of one aligned batch")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page tokens (ServeSpec.page_size; 0 = "
+                         "contiguous degenerate, one page per slot)")
+    ap.add_argument("--max-pages", type=int, default=0,
+                    help="KV page pool size (ServeSpec.max_pages; 0 = "
+                         "worst case batch * pages-per-slot)")
+    ap.add_argument("--policy", choices=("fifo", "deadline"),
+                    default="fifo",
+                    help="scheduler admission policy (deadline orders the "
+                         "queue by slack, FIFO among ties; the synthetic "
+                         "requests get staggered deadlines so the order "
+                         "actually differs from FIFO)")
     return ap
 
 
@@ -65,6 +77,14 @@ def main(argv=None):
     if a.reduced:
         cfg = make_reduced(cfg)
 
+    if not a.requests and (a.page_size or a.max_pages
+                           or a.policy != "fifo"):
+        raise SystemExit(
+            "--page-size/--max-pages/--policy drive the continuous-"
+            "batching scheduler; the aligned generate() path keeps the "
+            "contiguous reference cache and would silently drop them — "
+            "add --requests N")
+
     partition = PartitionSpec()
     if a.backend == "spmd":
         dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
@@ -72,23 +92,37 @@ def main(argv=None):
     plan = Plan(arch=cfg, partition=partition,
                 serve=ServeSpec(prompt_len=a.prompt_len, gen=a.gen,
                                 max_batch=a.batch,
-                                temperature=a.temperature),
+                                temperature=a.temperature,
+                                page_size=a.page_size,
+                                max_pages=a.max_pages),
                 run=RunSpec(backend=a.backend))
     eng = Engine(plan)
 
     if a.requests:
         rng = np.random.default_rng(1)
+        # deadline policy: staggered synthetic deadlines (in decode
+        # steps), tighter for later arrivals, so slack ordering visibly
+        # reorders the FIFO queue
+        def deadline(i):
+            if a.policy != "deadline":
+                return 0
+            return int(a.gen * (1 + (a.requests - i)))
         reqs = [Request(rid=i,
                         prompt=rng.integers(0, cfg.vocab_size, a.prompt_len,
-                                            dtype=np.int32))
+                                            dtype=np.int32),
+                        deadline=deadline(i))
                 for i in range(a.requests)]
-        rep = Scheduler(eng).run(reqs)
+        rep = Scheduler(eng, policy=a.policy).run(reqs)
         occ = rep.occupancy()       # None when no decode step ran (gen=1)
+        pu = rep.page_utilization()
         print(f"arch={cfg.name} backend={a.backend} requests={a.requests} "
               f"slots={a.batch} tokens={rep.tokens_out} "
               f"decode={rep.ms_per_token():.1f}ms/tok "
               f"throughput={rep.tokens_per_s():.1f} tok/s "
-              f"occupancy={'n/a' if occ is None else f'{occ:.2f}'}")
+              f"occupancy={'n/a' if occ is None else f'{occ:.2f}'} "
+              f"pages={rep.peak_pages}/{rep.pages_total}"
+              f"(x{rep.page_size} tok)"
+              f" util={'n/a' if pu is None else f'{pu:.2f}'}")
         lat = sorted(r.latency_s for r in rep.requests)
         print(f"latency: p50={lat[len(lat) // 2] * 1e3:.1f}ms "
               f"max={lat[-1] * 1e3:.1f}ms")

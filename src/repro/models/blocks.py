@@ -21,6 +21,7 @@ from repro.configs.base import ArchConfig
 from repro.models import attention as attn_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import rms_norm, layer_norm, rope_cos_sin, apply_rope
+from repro.serve import cache as cache_lib
 
 
 @dataclass
@@ -36,6 +37,9 @@ class LayerCtx:
     win_i: Any = 0                  # slot in the stage-local windowed group
     ssm_i: Any = 0                  # slot in the stage-local ssm group
     valid: Any = True               # padded layer slots are masked out
+    lens: Any = None                # per-row prompt lengths ([B]) — prefill
+                                    # of variable-length (right-padded)
+                                    # prompts; None = every row is full
 
 
 def _psum(x, axis):
@@ -125,56 +129,66 @@ def _attn_train(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         new_cache = dict(cache)
         if "kv_full" in cache:
             kf, vf = cache["kv_full"]
-            Sc = kf.shape[2]
-            ks = k[:, -Sc:] if S >= Sc else jnp.pad(k, ((0, 0), (0, Sc - S), (0, 0), (0, 0)))
-            vs = v[:, -Sc:] if S >= Sc else jnp.pad(v, ((0, 0), (0, Sc - S), (0, 0), (0, 0)))
-            sel = jnp.asarray(ctx.kind == 0)
             i = jnp.asarray(ctx.full_i)
-            kf = kf.at[i].set(jnp.where(sel, ks.astype(kf.dtype), kf[i]))
-            vf = vf.at[i].set(jnp.where(sel, vs.astype(vf.dtype), vf[i]))
+            sel = jnp.asarray(ctx.kind == 0)
+            if cache_lib.is_paged(cache):
+                tab = cache["block_tab"]
+                sel_b = jnp.broadcast_to(sel & jnp.asarray(ctx.valid),
+                                         (B,))
+                kf = cache_lib.page_write_prompt(kf, i, tab, k, sel_b,
+                                                 ctx.lens)
+                vf = cache_lib.page_write_prompt(vf, i, tab, v, sel_b,
+                                                 ctx.lens)
+            else:
+                Sc = kf.shape[2]
+                ks = k[:, -Sc:] if S >= Sc else jnp.pad(k, ((0, 0), (0, Sc - S), (0, 0), (0, 0)))
+                vs = v[:, -Sc:] if S >= Sc else jnp.pad(v, ((0, 0), (0, Sc - S), (0, 0), (0, 0)))
+                kf = kf.at[i].set(jnp.where(sel, ks.astype(kf.dtype), kf[i]))
+                vf = vf.at[i].set(jnp.where(sel, vs.astype(vf.dtype), vf[i]))
             new_cache["kv_full"] = (kf, vf)
         if "kv_win" in cache:
             kw, vw = cache["kv_win"]
             W = kw.shape[2]
             # ring layout: slot = position % W
-            take = min(W, S)
-            kl, vl = k[:, -take:], v[:, -take:]
-            pos_tail = ctx.q_offset + S - take + jnp.arange(take)
-            slots = pos_tail % W
             sel = jnp.asarray(ctx.kind == 1)
             i = jnp.asarray(ctx.win_i)
-            kw_i = kw[i].at[:, slots].set(kl.astype(kw.dtype))
-            vw_i = vw[i].at[:, slots].set(vl.astype(vw.dtype))
+            if ctx.lens is None:
+                take = min(W, S)
+                kl, vl = k[:, -take:], v[:, -take:]
+                pos_tail = ctx.q_offset + S - take + jnp.arange(take)
+                slots = pos_tail % W
+                kw_i = kw[i].at[:, slots].set(kl.astype(kw.dtype))
+                vw_i = vw[i].at[:, slots].set(vl.astype(vw.dtype))
+            else:
+                # variable-length rows: walk the prompt in W-sized chunks so
+                # each write's ring slots are unique; positions >= lens[b]
+                # keep the slot's previous value, so every row's ring ends
+                # up holding exactly its own last min(W, lens[b]) tokens
+                kw_i, vw_i = kw[i], vw[i]
+                for c0 in range(0, S, W):
+                    take = min(W, S - c0)
+                    gpos = ctx.q_offset + c0 + jnp.arange(take)
+                    slots = gpos % W
+                    live = gpos[None, :] < ctx.lens[:, None]   # [B, take]
+                    k_c = jnp.where(live[..., None, None],
+                                    k[:, c0:c0 + take].astype(kw.dtype),
+                                    kw_i[:, slots])
+                    v_c = jnp.where(live[..., None, None],
+                                    v[:, c0:c0 + take].astype(vw.dtype),
+                                    vw_i[:, slots])
+                    kw_i = kw_i.at[:, slots].set(k_c)
+                    vw_i = vw_i.at[:, slots].set(v_c)
             kw = kw.at[i].set(jnp.where(sel, kw_i, kw[i]))
             vw = vw.at[i].set(jnp.where(sel, vw_i, vw[i]))
             new_cache["kv_win"] = (kw, vw)
     return o.reshape(B, S, Hl * hd) @ p["wo"].astype(xn.dtype), new_cache
 
 
-def _upd_kv(group, i, pos_idx, new_row, sel):
-    """Single-position conditional cache write: group [m, B, S, KV, hd],
-    new_row [B, 1, KV, hd]. Touches only the written row (in-place on TPU)."""
-    start = (i, 0, pos_idx, 0, 0)
-    old = jax.lax.dynamic_slice(group, start, (1,) + new_row.shape)
-    upd = jnp.where(sel, new_row.astype(group.dtype)[None], old)
-    return jax.lax.dynamic_update_slice(group, upd, start)
-
-
-def _upd_kv_rows(group, i, pos_idx, new_row, sel):
-    """Per-row conditional cache write for continuous batching: each batch
-    row b lands at its own position pos_idx[b]. group [m, B, S, KV, hd],
-    new_row [B, 1, KV, hd], pos_idx/sel [B]."""
-    rows = jnp.arange(group.shape[1])
-    old = group[i, rows, pos_idx]                       # [B, KV, hd]
-    upd = jnp.where(sel[:, None, None],
-                    new_row[:, 0].astype(group.dtype), old)
-    return group.at[i, rows, pos_idx].set(upd)
-
-
 def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
     """Single-token attention against the stage-local cache groups. ctx.pos
     is a scalar (aligned batch) or a [B] vector (continuous batching: each
-    row at its own depth)."""
+    row at its own depth). Full-attention K/V is read through the block
+    table (paged trees) or directly (the contiguous reference layout)."""
     q, k, v = _qkv(cfg, p, xn, ctx)
     B, _, Hl, hd = q.shape
     pos_a = jnp.asarray(ctx.pos)
@@ -182,7 +196,23 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
     new_cache = dict(cache)
     outs = []
 
-    if "kv_full" in cache:
+    if "kv_full" in cache and cache_lib.is_paged(cache):
+        kf, vf = cache["kv_full"]
+        i = jnp.asarray(ctx.full_i)
+        tab = cache["block_tab"]
+        cap = tab.shape[1] * kf.shape[2]                # pps * page_size
+        pos_b = jnp.broadcast_to(pos_a, (B,))
+        sel = jnp.asarray(ctx.kind == 0) & jnp.asarray(ctx.valid)
+        sel_b = jnp.broadcast_to(sel, (B,)) & (pos_b >= 0) & (pos_b < cap)
+        kf = cache_lib.page_write_token(kf, i, tab, pos_b, k, sel_b)
+        vf = cache_lib.page_write_token(vf, i, tab, pos_b, v, sel_b)
+        new_cache["kv_full"] = (kf, vf)
+        k_view, gpos = cache_lib.page_view(kf, i, tab)
+        v_view, _ = cache_lib.page_view(vf, i, tab)
+        o_full = attn_lib.decode_attend(q, k_view, v_view, gpos, ctx.pos,
+                                        window=0, merge_axis=None)
+        outs.append((0, o_full))
+    elif "kv_full" in cache:
         kf, vf = cache["kv_full"]
         i = jnp.asarray(ctx.full_i)
         Sc = kf.shape[2]
@@ -191,11 +221,11 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         lic = jnp.clip(li, 0, Sc - 1)
         sel = jnp.asarray(ctx.kind == 0) & in_rng & jnp.asarray(ctx.valid)
         if per_row:
-            kf = _upd_kv_rows(kf, i, lic, k, sel)
-            vf = _upd_kv_rows(vf, i, lic, v, sel)
+            kf = cache_lib.upd_kv_rows(kf, i, lic, k, sel)
+            vf = cache_lib.upd_kv_rows(vf, i, lic, v, sel)
         else:
-            kf = _upd_kv(kf, i, lic, k, sel)
-            vf = _upd_kv(vf, i, lic, v, sel)
+            kf = cache_lib.upd_kv(kf, i, lic, k, sel)
+            vf = cache_lib.upd_kv(vf, i, lic, v, sel)
         new_cache["kv_full"] = (kf, vf)
         gpos = ctx.seq_offset + jnp.arange(Sc)
         o_full = attn_lib.decode_attend(q, kf[i], vf[i], gpos, ctx.pos,
@@ -209,15 +239,15 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         slot = pos_a % W                                # scalar or [B]
         sel = jnp.asarray(ctx.kind == 1) & jnp.asarray(ctx.valid)
         if per_row:
-            kw = _upd_kv_rows(kw, i, slot, k,
-                              jnp.broadcast_to(sel, (B,)))
-            vw = _upd_kv_rows(vw, i, slot, v,
-                              jnp.broadcast_to(sel, (B,)))
+            kw = cache_lib.upd_kv_rows(kw, i, slot, k,
+                                       jnp.broadcast_to(sel, (B,)))
+            vw = cache_lib.upd_kv_rows(vw, i, slot, v,
+                                       jnp.broadcast_to(sel, (B,)))
             # ring slot j holds position pos_b - ((pos_b - j) % W), per row
             gpos = pos_a[:, None] - ((pos_a[:, None] - jnp.arange(W)) % W)
         else:
-            kw = _upd_kv(kw, i, slot, k, sel)
-            vw = _upd_kv(vw, i, slot, v, sel)
+            kw = cache_lib.upd_kv(kw, i, slot, k, sel)
+            vw = cache_lib.upd_kv(vw, i, slot, v, sel)
             gpos = ctx.pos - ((ctx.pos - jnp.arange(W)) % W)
         new_cache["kv_win"] = (kw, vw)
         o_win = attn_lib.decode_attend(q, kw[i], vw[i], gpos, ctx.pos,
@@ -248,7 +278,9 @@ def _ssd_branch(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         new_cache["conv_tail"] = cache["conv_tail"].at[i].set(
             jnp.where(sel, tail2.astype(cache["conv_tail"].dtype), tail))
         return y, new_cache
-    y, stT, tail = ssm_lib.ssd_mix(p, xn, heads=H, d_state=N, d_inner=di)
+    y, stT, tail = ssm_lib.ssd_mix(p, xn, heads=H, d_state=N, d_inner=di,
+                                   lens=ctx.lens if ctx.mode == "prefill"
+                                   else None)
     if ctx.mode == "prefill" and cache is not None:
         i = jnp.asarray(ctx.ssm_i)
         sel = jnp.asarray(ctx.valid)
@@ -272,7 +304,9 @@ def _rwkv_layer(cfg: ArchConfig, p, x, ctx: LayerCtx, cache):
         y, st2, last1 = ssm_lib.rwkv6_mix_step(
             p, xx1, st, shifts[:, 0:1], heads=H)
     else:
-        y, st2, last1 = ssm_lib.rwkv6_mix(p, xx1, heads=H)
+        y, st2, last1 = ssm_lib.rwkv6_mix(
+            p, xx1, heads=H,
+            lens=ctx.lens if ctx.mode == "prefill" else None)
     x = x + y
     xx2 = rms_norm(x, p["ln2"], eps=cfg.norm_eps)
     if ctx.mode == "decode":
@@ -288,7 +322,13 @@ def _rwkv_layer(cfg: ArchConfig, p, x, ctx: LayerCtx, cache):
     if cache is not None:
         i = jnp.asarray(ctx.ssm_i)
         sel = jnp.asarray(ctx.valid)
-        new_shift = jnp.concatenate([last1, xx2[:, -1:]], axis=1)
+        if ctx.mode == "prefill" and ctx.lens is not None:
+            # channel-mix shift state: the last *real* token per row
+            last2 = jnp.take_along_axis(
+                xx2, jnp.maximum(ctx.lens - 1, 0)[:, None, None], axis=1)
+        else:
+            last2 = xx2[:, -1:]
+        new_shift = jnp.concatenate([last1, last2], axis=1)
         new_cache["ssm_state"] = cache["ssm_state"].at[i].set(
             jnp.where(sel, st2, cache["ssm_state"][i]))
         new_cache["shift"] = cache["shift"].at[i].set(

@@ -288,83 +288,36 @@ def stage_apply(cfg: ArchConfig, blocks_local, x, meta_local, ctx: LayerCtx,
 
 
 # ----------------------------------------------------------------------------
-# Caches
+# Caches — layout knowledge lives in repro.serve.cache; these wrappers keep
+# the historical import site (`lm.cache_struct` etc.) working by delegating.
 # ----------------------------------------------------------------------------
 def serve_dtypes(compute_dtype: str, cache_dtype: str = ""):
-    """Resolve the string knobs shared by RunConfig/ServeSpec to
-    (compute jnp dtype, cache jnp dtype): compute 'bfloat16' | 'float32';
-    cache '' (= compute dtype) or 'f8' (fp8 KV). One mapping for every
-    consumer (wave steps, input specs, the Engine serve path), so a new
-    cache dtype cannot drift between the allocator and the compiled step."""
-    cdt = jnp.bfloat16 if compute_dtype == "bfloat16" else jnp.float32
-    return cdt, {"f8": jnp.float8_e4m3fn, "": cdt}.get(cache_dtype, cdt)
+    from repro.serve import cache as cache_lib
+    return cache_lib.serve_dtypes(compute_dtype, cache_dtype)
 
 
 def cache_struct(cfg: ArchConfig, batch: int, max_len: int, *,
                  seq_shards: int = 1, dtype=jnp.bfloat16):
-    """Returns (cache_shapes pytree of ShapeDtypeStruct, specs pytree).
-
-    Cache group layout (global):
-      kv_full [stages*m_full, B, S, KV, hd]   (seq possibly sharded over data)
-      kv_win  [stages*m_win,  B, W, KV, hd]
-      ssm_state [Lp, B, H, K, P] fp32 ; conv_tail/shift small
-    """
-    meta = layer_meta(cfg)
-    st = cfg.stages
-    Lp = cfg.padded_layers
-    kv_tp = T_AX if (cfg.num_kv_heads and cfg.tp > 1
-                     and cfg.num_kv_heads % cfg.tp == 0) else None
-    batch_ax = D_AX if batch >= 16 else None
-    seq_ax = D_AX if seq_shards > 1 else None
-    shapes, specs = {}, {}
-    hd, KV = cfg.head_dim, cfg.num_kv_heads
-    if meta["m_full"] > 0 and cfg.attn_type != "none":
-        shp = (st * meta["m_full"], batch, max_len, KV, hd)
-        shapes["kv_full"] = tuple(jax.ShapeDtypeStruct(shp, dtype)
-                                  for _ in range(2))
-        specs["kv_full"] = tuple(P(S_AX, batch_ax, seq_ax, kv_tp, None)
-                                 for _ in range(2))
-    if meta["m_win"] > 0:
-        W = min(cfg.window_size, max_len)
-        shp = (st * meta["m_win"], batch, W, KV, hd)
-        shapes["kv_win"] = tuple(jax.ShapeDtypeStruct(shp, dtype)
-                                 for _ in range(2))
-        specs["kv_win"] = tuple(P(S_AX, batch_ax, None, kv_tp, None)
-                                for _ in range(2))
-    if cfg.ssm_type == "ssd":
-        H, N, Pd = cfg.n_ssm_heads, cfg.ssm_state, cfg.d_inner // cfg.n_ssm_heads
-        shapes["ssm_state"] = jax.ShapeDtypeStruct((Lp, batch, H, N, Pd),
-                                                   jnp.float32)
-        specs["ssm_state"] = P(S_AX, batch_ax, None, None, None)
-        shapes["conv_tail"] = jax.ShapeDtypeStruct(
-            (Lp, batch, 3, cfg.d_inner + 2 * N), dtype)
-        specs["conv_tail"] = P(S_AX, batch_ax, None, None)
-    if cfg.ssm_type == "rwkv6":
-        H = cfg.n_ssm_heads
-        hds = cfg.d_model // H
-        shapes["ssm_state"] = jax.ShapeDtypeStruct((Lp, batch, H, hds, hds),
-                                                   jnp.float32)
-        specs["ssm_state"] = P(S_AX, batch_ax, None, None, None)
-        shapes["shift"] = jax.ShapeDtypeStruct((Lp, batch, 2, cfg.d_model),
-                                               dtype)
-        specs["shift"] = P(S_AX, batch_ax, None, None)
-    return shapes, specs
+    from repro.serve import cache as cache_lib
+    return cache_lib.cache_struct(cfg, batch, max_len, seq_shards=seq_shards,
+                                  dtype=dtype)
 
 
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, seq_shards=1,
                dtype=jnp.bfloat16):
-    shapes, _ = cache_struct(cfg, batch, max_len, seq_shards=seq_shards,
-                             dtype=dtype)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes,
-                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    from repro.serve import cache as cache_lib
+    return cache_lib.init_cache(cfg, batch, max_len, seq_shards=seq_shards,
+                                dtype=dtype)
 
 
 # ----------------------------------------------------------------------------
 # Reference (non-pipelined, single-device) forward — the pipeline oracle
 # ----------------------------------------------------------------------------
 def forward_ref(cfg: ArchConfig, params, tokens_or_embeds, *, mode="train",
-                cache=None, pos=None, labels=None):
-    """Plain layer loop. Returns (loss or hidden, cache, aux)."""
+                cache=None, pos=None, labels=None, lens=None):
+    """Plain layer loop. Returns (loss or hidden, cache, aux). `lens` [B]
+    marks per-row prompt lengths for variable-length (right-padded)
+    prefill — cache writes stop at each row's length."""
     x = embed_tokens(cfg, params, tokens_or_embeds)
     meta = layer_meta(cfg)
     aux_t = jnp.zeros((), jnp.float32)
@@ -382,7 +335,7 @@ def forward_ref(cfg: ArchConfig, params, tokens_or_embeds, *, mode="train",
         ctx = LayerCtx(mode=mode, pos=pos, kind=int(kinds[l]),
                        full_i=int(st_idx * meta["m_full"] + full_i[l]),
                        win_i=int(st_idx * meta["m_win"] + win_i[l]),
-                       ssm_i=l, valid=True)
+                       ssm_i=l, valid=True, lens=lens)
         p_l = jax.tree.map(lambda a: a[l], params["blocks"])
         x, cache, a = apply_layer(cfg, p_l, x, ctx, cache)
         aux_t = aux_t + a

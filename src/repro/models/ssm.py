@@ -67,11 +67,21 @@ def _rwkv_head_out(p, y, g, heads):
     return out
 
 
-def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None, prev_xx=None):
-    """Chunked RWKV6 time-mix. xx [B,S,d]. Returns y, final_state, last_xx."""
+def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None,
+              prev_xx=None, lens=None):
+    """Chunked RWKV6 time-mix. xx [B,S,d]. Returns y, final_state, last_xx.
+
+    lens [B] (optional): per-row valid prefix for right-padded variable-
+    length prompts. Padded positions are made a state no-op (k = 0,
+    decay = 1, so S_t = S_{t-1}) and last_xx is the last *real* token per
+    row; y at padded positions is garbage and must not be read."""
     B, S, d = xx.shape
     hd = d // heads
     r, k, v, g, logw = rwkv6_projections(p, xx, prev_xx, heads)
+    if lens is not None:
+        live = (jnp.arange(S)[None, :] < lens[:, None])[..., None, None]
+        k = jnp.where(live, k, 0.0)
+        logw = jnp.where(live, logw, 0.0)
     u = p["u"].astype(jnp.float32)                          # [H, hd]
     if state0 is None:
         state0 = jnp.zeros((B, heads, hd, hd), jnp.float32)
@@ -107,7 +117,9 @@ def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None, prev_xx=None):
     stateT, yc = jax.lax.scan(chunk_step, state0, (rc, kc, vc, wc))
     y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, heads, hd)
     out = _rwkv_head_out(p, y, g, heads)
-    return out.astype(xx.dtype), stateT, xx[:, -1:]
+    last = xx[:, -1:] if lens is None else jnp.take_along_axis(
+        xx, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
+    return out.astype(xx.dtype), stateT, last
 
 
 def rwkv6_mix_step(p, xx, state, prev_xx, *, heads: int):
@@ -127,25 +139,33 @@ def rwkv6_mix_step(p, xx, state, prev_xx, *, heads: int):
 # ----------------------------------------------------------------------------
 # SSD (Mamba-2 style), scalar-per-head decay
 # ----------------------------------------------------------------------------
-def _dw_conv4(x, w, tail=None):
+def _dw_conv4(x, w, tail=None, lens=None):
     """Causal depthwise conv, kernel 4, via shifts. x [B,S,c]; w [4,c];
-    tail [B,3,c] previous inputs (decode continuity)."""
+    tail [B,3,c] previous inputs (decode continuity). lens [B] (optional):
+    the returned tail holds each row's last three inputs *before* position
+    lens[b] (variable-length right-padded prefill) instead of xp[:, -3:]."""
     B, S, c = x.shape
     if tail is None:
         tail = jnp.zeros((B, 3, c), x.dtype)
     xp = jnp.concatenate([tail, x], axis=1)            # [B, S+3, c]
     out = sum(xp[:, 3 - i: 3 - i + S] * w[3 - i] for i in range(4))
-    return out, xp[:, -3:]
+    if lens is None:
+        return out, xp[:, -3:]
+    # xp index t+3 holds input position t -> rows' last real inputs sit at
+    # xp indices lens[b] .. lens[b]+2
+    idx = jnp.clip(lens, 0, S)[:, None] + jnp.arange(3)[None, :]
+    return out, jnp.take_along_axis(xp, idx[..., None], axis=1)
 
 
-def ssd_projections(p, x, cfg_heads, d_inner, d_state, conv_tail=None):
+def ssd_projections(p, x, cfg_heads, d_inner, d_state, conv_tail=None,
+                    lens=None):
     """in_proj + conv + activations. x [B,S,d]. Returns z,xh,Bm,Cm,dt,tail."""
     B, S, _ = x.shape
     H, N = cfg_heads, d_state
     proj = x @ p["in_proj"]
     z, xbc, dt_raw = jnp.split(
         proj, [d_inner, d_inner + d_inner + 2 * N], axis=-1)
-    xbc, tail = _dw_conv4(xbc, p["conv_w"], conv_tail)
+    xbc, tail = _dw_conv4(xbc, p["conv_w"], conv_tail, lens=lens)
     xbc = jax.nn.silu(xbc)
     xh, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
@@ -153,11 +173,22 @@ def ssd_projections(p, x, cfg_heads, d_inner, d_state, conv_tail=None):
 
 
 def ssd_mix(p, x, *, heads: int, d_state: int, d_inner: int, chunk: int = 64,
-            state0=None, conv_tail=None):
-    """Chunked SSD. x [B,S,d]. Returns y [B,S,d], final_state, conv_tail."""
+            state0=None, conv_tail=None, lens=None):
+    """Chunked SSD. x [B,S,d]. Returns y [B,S,d], final_state, conv_tail.
+
+    lens [B] (optional): per-row valid prefix for right-padded variable-
+    length prompts. Padded positions are a state no-op (dt = 0, so
+    h_t = h_{t-1}) and the returned conv tail holds each row's last three
+    *real* inputs; y at padded positions is garbage and must not be read."""
     B, S, d = x.shape
     H, N, P = heads, d_state, d_inner // heads
-    z, xh, Bm, Cm, dt, tail = ssd_projections(p, x, H, d_inner, N, conv_tail)
+    z, xh, Bm, Cm, dt, tail = ssd_projections(p, x, H, d_inner, N, conv_tail,
+                                              lens=lens)
+    if lens is not None:
+        # padded positions are a state no-op: dt = 0 -> decay exp(0) = 1
+        # and a zero state injection
+        dt = jnp.where((jnp.arange(S)[None, :] < lens[:, None])[..., None],
+                       dt, 0.0)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H], < 0
     if state0 is None:
         state0 = jnp.zeros((B, H, N, P), jnp.float32)

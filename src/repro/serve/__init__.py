@@ -1,0 +1,14 @@
+"""repro.serve — the serving-side state subsystem.
+
+`repro.serve.cache` owns every byte of KV/SSM decoding state: the
+contiguous reference layout, the paged pool + block-table layout, and the
+`CacheStore` that accounts for both. See its module docstring for the
+memory model.
+"""
+from repro.serve.cache import (CacheStore, PageLayout, cache_struct,
+                               init_cache, init_paged, is_paged,
+                               make_layout, paged_struct, serve_dtypes)
+
+__all__ = ["CacheStore", "PageLayout", "cache_struct", "init_cache",
+           "init_paged", "is_paged", "make_layout", "paged_struct",
+           "serve_dtypes"]

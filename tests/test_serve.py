@@ -312,3 +312,4 @@ def test_serve_parity_on_pipelined_mesh(arch, seed):
     assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
     assert "generate_tokens_identical=1" in r.stdout
     assert "scheduler_tokens_identical=1" in r.stdout
+    assert "paged_scheduler_tokens_identical=1" in r.stdout
