@@ -28,12 +28,13 @@ from repro.api.engine import Engine
 from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
                             ServeSpec)
 from repro.api.presets import PRESETS, get_preset, list_presets
-from repro.api.report import RequestStats, ServeReport, TrainReport
+from repro.api.report import (RequestStats, ServeReport, Telemetry,
+                              TrainReport)
 from repro.api.sync import ASP, BSP, SyncPolicy, UNBOUNDED_D, WSP
 
 __all__ = [
     "ASP", "BSP", "ClusterSpec", "Engine", "PartitionSpec", "Plan",
     "PRESETS", "RequestStats", "RunSpec", "ServeReport", "ServeSpec",
-    "SyncPolicy", "TrainReport", "UNBOUNDED_D", "WSP", "get_preset",
-    "list_presets",
+    "SyncPolicy", "Telemetry", "TrainReport", "UNBOUNDED_D", "WSP",
+    "get_preset", "list_presets",
 ]

@@ -36,9 +36,11 @@ import jax
 import numpy as np
 
 from repro.api.plan import Plan
-from repro.api.report import ServeReport, TrainReport
+from repro.api.report import ServeReport, Telemetry, TrainReport
 from repro.api.sync import BSP, WSP
 from repro.core.param_server import ParameterServer
+from repro.obs import NULL_TRACER, emit_pipeline_ticks
+from repro.obs.metrics import SECONDS_BOUNDS
 from repro.data.pipeline import MarkovLM, ShardedLoader
 from repro.dist import collectives
 from repro.dist.topology import make_topology
@@ -54,7 +56,7 @@ class Engine:
     may inject prebuilt ones instead."""
 
     def __init__(self, plan: Plan, *, params=None, wave_step=None,
-                 optimizer=None):
+                 optimizer=None, tracer=None):
         if not isinstance(plan, Plan):
             raise TypeError(f"Engine wants a Plan, got {type(plan).__name__}")
         if plan.arch is None and (params is None or wave_step is None
@@ -62,6 +64,10 @@ class Engine:
             raise ValueError("Plan.arch is unset: inject params, wave_step "
                              "and optimizer, or give the Plan an ArchConfig")
         self.plan = plan
+        # the tracer is runtime state, not Plan state: the same frozen Plan
+        # runs traced or untraced. It cascades into the PS, transport,
+        # workers and scheduler this engine builds.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._params = params
         self._wave_step = wave_step
         self._optimizer = optimizer
@@ -124,17 +130,51 @@ class Engine:
             topo = make_topology(topo, plan.cluster.num_vw)
         self.topology = topo
         transport = (SimulatedTransport(topo,
-                                        time_scale=plan.cluster.time_scale)
+                                        time_scale=plan.cluster.time_scale,
+                                        tracer=self.tracer)
                      if topo is not None else None)
         self.ps = ParameterServer(
             self._params, D=policy.D,
             compression_ratio=plan.run.compression_ratio,
-            codec=plan.run.codec, transport=transport)
+            codec=plan.run.codec, transport=transport,
+            tracer=self.tracer)
 
     def _loader(self, i: int, num_vw: int) -> ShardedLoader:
         run = self.plan.run
         return ShardedLoader(self._source, run.batch, run.seq, i, num_vw,
                              seed=17)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def _tick_plan(self):
+        """(schedule, ticks) of the Plan's modeled intra-VW pipeline, or
+        None when the Plan carries no arch (injected wave steps have no
+        declared stage structure to render)."""
+        if not self.tracer.enabled or self.plan.arch is None:
+            return None
+        from repro.core import wave
+        arch = self._model_arch()
+        return wave.tick_schedule(arch.stages, self.plan.num_microbatches,
+                                  overlap=self.plan.run.overlap)
+
+    def attach_telemetry(self, report):
+        """Record end-of-run gauges (staleness bound, per-link traffic) and
+        attach the metrics snapshot to `report` — no-op untraced."""
+        if not self.tracer.enabled:
+            return report
+        m = self.tracer.metrics
+        policy = self.plan.sync
+        if isinstance(policy, WSP):
+            m.gauge_set("wsp/D", policy.D)
+        if self.ps is not None:
+            stats = self.ps.transport.stats()
+            for name, b in stats["bytes_by_link"].items():
+                m.gauge_set(f"link/{name}/bytes", b)
+            for name, s in stats["seconds_by_link"].items():
+                m.gauge_set(f"link/{name}/modeled_s", s)
+        report.telemetry = Telemetry.from_metrics(m)
+        return report
 
     # ------------------------------------------------------------------
     # public surface
@@ -151,18 +191,20 @@ class Engine:
                              "fit() trains")
         if plan.run.resume and plan.run.ckpt_dir:
             self.restore()
-        if plan.run.backend == "spmd":
-            if rejoin_failed_after is not None:
-                raise ValueError("elastic rejoin is a feature of the "
-                                 "threaded parameter-server fleet; the "
-                                 "jitted spmd backend has no workers to "
-                                 "rejoin")
-            self.report = self._fit_spmd(callback=callback)
-        else:
-            self.report = plan.sync.execute(
-                self, rejoin_failed_after=rejoin_failed_after,
-                callback=callback)
-        return self.report
+        with self.tracer.span("engine", "fit", backend=plan.run.backend,
+                              sync=plan.sync.describe()):
+            if plan.run.backend == "spmd":
+                if rejoin_failed_after is not None:
+                    raise ValueError("elastic rejoin is a feature of the "
+                                     "threaded parameter-server fleet; the "
+                                     "jitted spmd backend has no workers to "
+                                     "rejoin")
+                self.report = self._fit_spmd(callback=callback)
+            else:
+                self.report = plan.sync.execute(
+                    self, rejoin_failed_after=rejoin_failed_after,
+                    callback=callback)
+        return self.attach_telemetry(self.report)
 
     def step(self):
         """One synchronous wave (single-worker semantics on the threads
@@ -172,7 +214,9 @@ class Engine:
                              "serves — use prefill()/decode()/generate()")
         if self.plan.run.backend == "spmd":
             self._ensure_spmd()
-            return self._spmd_step()
+            with self.tracer.span("engine", "step",
+                                  wave=self._spmd["wave"]):
+                return self._spmd_step()
         policy = self.plan.sync
         if not isinstance(policy, WSP):
             raise ValueError(
@@ -194,10 +238,11 @@ class Engine:
         wid = ctx["wid"]
         if not self.ps.wait_pull_allowed(wid, timeout=120.0):
             raise TimeoutError(f"{wid}: staleness gate never opened")
-        x, y = ctx["loader"].next()
-        deltas, ctx["opt_state"], loss = self._wave_step(
-            ctx["params"], ctx["opt_state"], x, y)
-        wave = self.ps.push_wave(wid, deltas)
+        with self.tracer.span("engine", "step"):
+            x, y = ctx["loader"].next()
+            deltas, ctx["opt_state"], loss = self._wave_step(
+                ctx["params"], ctx["opt_state"], x, y)
+            wave = self.ps.push_wave(wid, deltas)
         # mirror VirtualWorker's weight handling so fit() and step() agree:
         # local weights see their own wave immediately, w_global is pulled
         # every pull_every waves
@@ -456,8 +501,11 @@ class Engine:
                 f"prompts {prompts.shape} disagree with the frozen serve "
                 f"shapes [{sv.max_batch}, {sv.prompt_len}]; pad the batch "
                 f"to max_batch (ServeSpec shapes compile once)")
-        logits, cache = st["prefill"](st["params"], prompts,
-                                      self.serve_cache())
+        with self.tracer.span("engine", "prefill", batch=sv.max_batch):
+            logits, cache = st["prefill"](st["params"], prompts,
+                                          self.serve_cache())
+            if self.tracer.enabled:      # span measures compute, not dispatch
+                jax.block_until_ready(logits)
         return logits[:, -1], cache
 
     def prefill_into(self, store, prompts, lens, slots):
@@ -486,8 +534,11 @@ class Engine:
                 f"shapes [{sv.max_batch}, {sv.prompt_len}] (pad short "
                 f"prompts on the right; lens carries the real lengths)")
         lens = jnp.asarray(lens, jnp.int32)
-        logits, out = pg["prefill"](st["params"], prompts, lens,
-                                    store.prefill_input(slots))
+        with self.tracer.span("engine", "prefill", rows=len(slots)):
+            logits, out = pg["prefill"](st["params"], prompts, lens,
+                                        store.prefill_input(slots))
+            if self.tracer.enabled:
+                jax.block_until_ready(logits)
         store.append_rows(out, [(j, s) for j, s in enumerate(slots)])
         return logits[:, -1]
 
@@ -510,14 +561,20 @@ class Engine:
         if isinstance(cache, CacheStore):
             self._ensure_serve_store()
             st, pg = self._serve, self._serve_paged
-            logits, out = pg["decode"](st["params"], jnp.asarray(tokens),
-                                       cache.tree, pos)
+            with self.tracer.span("engine", "decode"):
+                logits, out = pg["decode"](st["params"], jnp.asarray(tokens),
+                                           cache.tree, pos)
+                if self.tracer.enabled:
+                    jax.block_until_ready(logits)
             cache.update(out)
             return logits[:, -1], cache
         self._ensure_serve()
         st = self._serve
-        logits, cache = st["decode"](st["params"], jnp.asarray(tokens),
-                                     cache, pos)
+        with self.tracer.span("engine", "decode"):
+            logits, cache = st["decode"](st["params"], jnp.asarray(tokens),
+                                         cache, pos)
+            if self.tracer.enabled:
+                jax.block_until_ready(logits)
         return logits[:, -1], cache
 
     def _serve_prompts(self, key):
@@ -547,10 +604,13 @@ class Engine:
             prompts = self._serve_prompts(key)
         report = ServeReport(arch=cfg.name, backend=plan.run.backend,
                              max_batch=sv.max_batch)
+        t_tr = self.tracer.now()
         t_start = time.monotonic()
         logits, cache = self.prefill(prompts)
         jax.block_until_ready(logits)
         report.prefill_s = time.monotonic() - t_start
+        report.prefill_calls = 1
+        self.tracer.metrics.observe("serve/ttft_s", report.prefill_s)
         tok = _pick(logits, sv.temperature, jax.random.fold_in(key, 0))
         toks = [tok]
         if callback is not None:
@@ -574,7 +634,9 @@ class Engine:
                 callback(t, tok)
         report.tokens = np.stack([np.asarray(t) for t in toks], axis=1)
         report.wall_s = time.monotonic() - t_start
-        return report
+        self.tracer.add_span("engine", "generate", t_tr, self.tracer.now(),
+                             gen=sv.gen, batch=sv.max_batch)
+        return self.attach_telemetry(report)
 
     # ------------------------------------------------------------------
     # threads backend: WSP / ASP (policy.execute lands here)
@@ -591,7 +653,8 @@ class Engine:
             slowdown=speeds[i], straggle_fn=straggle[i],
             stop_event=self.stop_event,
             fail_at_wave=cl.fail_map().get(i),
-            async_push=policy.async_push)
+            async_push=policy.async_push,
+            tracer=self.tracer, D=policy.D, tick_plan=self._tick_plan())
 
     def _fit_threaded(self, policy: WSP, *,
                       rejoin_failed_after: Optional[float] = None,
@@ -711,21 +774,32 @@ class Engine:
                       for _ in range(num_vw)]
         speeds = plan.cluster.speeds or (0.0,) * num_vw
         report = TrainReport()
+        waits = {f"vw{i}": 0.0 for i in range(num_vw)}
+        tr = self.tracer
         sim_t = 0.0
         for wave_i in range(run.max_waves):
-            deltas_all, losses = [], []
+            deltas_all, losses, per_vw_t = [], [], []
             t_wave = 0.0
-            for i in range(num_vw):
-                x, y = loaders[i].next()
-                tw0 = time.monotonic()
-                deltas, opt_states[i], loss = self._wave_step(
-                    params, opt_states[i], x, y)
-                t_wave = max(t_wave, time.monotonic() - tw0 + speeds[i])
-                deltas_all.append(deltas)
-                losses.append(float(loss))
-            mean_delta, coll_s = collectives.ring_allreduce(
-                deltas_all, topology=topo, workers=names,
-                average=policy.average)
+            with tr.span("engine", "bsp_wave", wave=wave_i):
+                for i in range(num_vw):
+                    x, y = loaders[i].next()
+                    tw0 = time.monotonic()
+                    with tr.span(f"vw{i}", "wave", wave=wave_i):
+                        deltas, opt_states[i], loss = self._wave_step(
+                            params, opt_states[i], x, y)
+                    t_i = time.monotonic() - tw0 + speeds[i]
+                    per_vw_t.append(t_i)
+                    t_wave = max(t_wave, t_i)
+                    deltas_all.append(deltas)
+                    losses.append(float(loss))
+                mean_delta, coll_s = collectives.ring_allreduce(
+                    deltas_all, topology=topo, workers=names,
+                    average=policy.average)
+            # the BSP barrier: each VW waits for the wave's slowest
+            for i, t_i in enumerate(per_vw_t):
+                waits[f"vw{i}"] += t_wave - t_i
+                tr.metrics.observe("train/wait_s", t_wave - t_i,
+                                   bounds=SECONDS_BOUNDS)
             params = jax.tree.map(np.add, params, mean_delta)
             nbytes = sum(np.asarray(l).nbytes
                          for l in jax.tree.leaves(mean_delta))
@@ -749,6 +823,7 @@ class Engine:
                 save_checkpoint(run.ckpt_dir, step, {"params": params},
                                 {"wave": step})
         report.wall_s = sim_t
+        report.wait_seconds = waits
         self._params = params
         return report
 
@@ -828,11 +903,19 @@ class Engine:
         self._ensure_spmd()
         run = self.plan.run
         report = TrainReport()
+        tick_plan = self._tick_plan()
         t_start = time.monotonic()
         for w in range(run.max_waves):
             t0 = time.monotonic()
-            loss = self._spmd_step()
+            with self.tracer.span("engine", "wave", wave=w):
+                loss = self._spmd_step()
             dt = time.monotonic() - t0
+            if tick_plan is not None:
+                # the jitted step is opaque to host tracing; render the
+                # Plan's pipeline schedule scaled into the measured window
+                sched, ticks = tick_plan
+                emit_pipeline_ticks(self.tracer, "spmd", sched, ticks,
+                                    t0, t0 + dt)
             report.losses.append((time.monotonic() - t_start, "spmd", loss))
             report.waves += 1
             if callback is not None:
@@ -844,6 +927,9 @@ class Engine:
                 # see the end-of-run state (matches the threads backend)
                 self.save()
         report.wall_s = time.monotonic() - t_start
+        # the jitted step has no host-visible sync gate; the key exists so
+        # downstream code reads one wait_seconds schema across backends
+        report.wait_seconds = {"spmd": 0.0}
         self._params = jax.tree.map(np.asarray, self._spmd["params"])
         return report
 

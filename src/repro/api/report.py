@@ -15,11 +15,60 @@ import numpy as np
 
 
 @dataclass
+class Telemetry:
+    """Aggregate observability state (repro.obs MetricsRegistry snapshot)
+    attached to TrainReport / ServeReport when the Engine runs with an
+    enabled tracer. The same payload is embedded in exported traces under
+    the top-level 'telemetry' key, so bench/CI code reads one schema."""
+
+    counters: dict = field(default_factory=dict)
+    gauges: dict = field(default_factory=dict)
+    histograms: dict = field(default_factory=dict)
+
+    @classmethod
+    def from_metrics(cls, registry) -> "Telemetry":
+        snap = registry.snapshot()
+        return cls(counters=snap["counters"], gauges=snap["gauges"],
+                   histograms=snap["histograms"])
+
+    def to_dict(self) -> dict:
+        return {"counters": dict(self.counters), "gauges": dict(self.gauges),
+                "histograms": dict(self.histograms)}
+
+    def hist_quantile(self, name: str, q: float) -> Optional[float]:
+        from repro.obs.metrics import quantile_from_snapshot
+        return quantile_from_snapshot(self.histograms.get(name), q)
+
+    def staleness_max(self) -> Optional[float]:
+        h = self.histograms.get("wsp/staleness")
+        return h["max"] if h and h["count"] else None
+
+    def bubble_fraction(self) -> Optional[float]:
+        b = self.counters.get("pipe/bubble_s", 0.0)
+        c = self.counters.get("pipe/busy_s", 0.0)
+        return b / (b + c) if (b + c) > 0 else None
+
+    def link_utilization(self, wall_s: float) -> dict:
+        """link name -> modeled busy fraction of the run's wall clock."""
+        out = {}
+        for k, v in self.gauges.items():
+            if k.startswith("link/") and k.endswith("/modeled_s"):
+                name = k.split("/", 2)[1]
+                out[name] = min(1.0, v / wall_s) if wall_s > 0 else 0.0
+        return out
+
+
+@dataclass
 class TrainReport:
     losses: list = field(default_factory=list)      # (wall_s, wid, loss)
     waves: int = 0
     wall_s: float = 0.0
+    # wid -> seconds that worker spent blocked at its sync gate. Populated
+    # by every backend: threads (WSP clock waits), bsp (per-wave straggler
+    # wait = slowest VW's wave time minus own), spmd ({"spmd": 0.0} — the
+    # jitted step has no host-visible gate)
     wait_seconds: dict = field(default_factory=dict)
+    telemetry: Optional[Telemetry] = None           # when tracing is enabled
     bytes_pushed: int = 0
     bytes_wire: int = 0
     comm_seconds: float = 0.0                       # modeled network time
@@ -54,10 +103,17 @@ class RequestStats:
     admitted_step: int = -1     # global decode step at admission
     finished_step: int = -1     # global decode step at retirement
     slot: int = -1              # batch slot the request occupied
-    prefill_s: float = 0.0      # duration of the batched prefill call this
-                                # request rode in (shared by every request
-                                # of its admission group, so summing it
-                                # across requests over-counts wall time)
+    group: int = -1             # admission group: index of the batched
+                                # prefill call this request rode in
+    prefill_s: float = 0.0      # duration of that batched prefill call —
+                                # shared by every request of its admission
+                                # group, so summing it across requests
+                                # over-counts wall time; group-level cost
+                                # lives in ServeReport.prefill_s /
+                                # prefill_calls, per-request arrival-to-
+                                # first-token in ttft_s
+    ttft_s: float = 0.0         # arrival -> first token (end of this
+                                # request's prefill group), wall clock
     latency_s: float = 0.0      # admission -> last token (wall clock)
 
     @property
@@ -75,6 +131,10 @@ class ServeReport:
                                 # archs) — scheduler runs use `requests`
     requests: list = field(default_factory=list)  # RequestStats
     prefill_s: float = 0.0      # total time inside prefill calls
+    prefill_calls: int = 0      # batched prefill calls issued (admission
+                                # groups); prefill_s / prefill_calls is the
+                                # mean group cost — per-request prefill_s
+                                # repeats its group's cost, don't sum it
     decode_s: float = 0.0       # total time inside decode calls
     decode_steps: int = 0       # batched decode calls issued
     slot_steps: int = 0         # sum over decode steps of active slots
@@ -86,6 +146,7 @@ class ServeReport:
     peak_pages: int = 0         # high-water mark of pages in use
     page_steps: int = 0         # sum over decode steps of pages in use
     admit_blocked: int = 0      # admission rounds refused: pool exhausted
+    telemetry: Optional[Telemetry] = None  # when tracing is enabled
 
     @property
     def tokens_out(self) -> int:
@@ -108,6 +169,15 @@ class ServeReport:
         if not self.decode_steps or not self.max_batch or not self.requests:
             return None
         return self.slot_steps / (self.decode_steps * self.max_batch)
+
+    def mean_ttft(self) -> Optional[float]:
+        """Mean arrival-to-first-token over requests (scheduler runs). Each
+        request's ttft_s ends at its *own* admission group's prefill, so a
+        group's cost enters each member's TTFT once and is never summed
+        across the group the way per-request prefill_s would be."""
+        if not self.requests:
+            return None
+        return float(np.mean([r.ttft_s for r in self.requests]))
 
     def page_utilization(self) -> Optional[float]:
         """Mean fraction of the KV page pool in use across decode steps

@@ -92,6 +92,7 @@ class Scheduler:
         self.engine = engine
         self.sv = plan.serve
         self.policy = policy
+        self.tracer = engine.tracer
 
     # ------------------------------------------------------------------
     def _pick_one(self, row, rid: int, k: int, key) -> int:
@@ -151,6 +152,7 @@ class Scheduler:
         active: dict[int, _Slot] = {}
         free = list(range(B))
         step = 0
+        tr = self.tracer
         t_start = time.monotonic()
 
         def retire(s: int, slot: _Slot):
@@ -160,6 +162,8 @@ class Scheduler:
             store.free(s)
             free.append(s)
             free.sort()
+            tr.instant("sched", "retire", rid=slot.req.rid, slot=s,
+                       step=step, tokens=len(slot.stats.tokens))
 
         while queue or active:
             # ---- admit: policy order into the lowest slots, page-gated --
@@ -176,6 +180,9 @@ class Scheduler:
                         # pool exhausted: stop admitting rather than
                         # over-reserving; retirements will free pages
                         report.admit_blocked += 1
+                        tr.instant("sched", "refuse", rid=r.rid, step=step,
+                                   need_tokens=need,
+                                   pages_in_use=store.pages_in_use)
                         break
                     s = free.pop(0)
                     store.alloc(s, need)
@@ -184,23 +191,39 @@ class Scheduler:
                 for qi in sorted(taken, reverse=True):
                     del queue[qi]
                 if admits:
+                    group = report.prefill_calls
+                    for r, prompt, s in admits:
+                        tr.instant("sched", "admit", rid=r.rid, slot=s,
+                                   step=step, group=group,
+                                   prompt_len=prompt.shape[0],
+                                   pages_in_use=store.pages_in_use)
                     prompts = np.zeros((B, P), np.int32)
                     lens = np.ones(B, np.int32)
                     for j, (r, prompt, _) in enumerate(admits):
                         prompts[j, :prompt.shape[0]] = prompt
                         lens[j] = prompt.shape[0]
                     t0 = time.monotonic()
-                    logits = np.asarray(eng.prefill_into(
-                        store, prompts, lens, [s for _, _, s in admits]))
+                    with tr.span("sched", "prefill_group", group=group,
+                                 rows=len(admits)):
+                        logits = np.asarray(eng.prefill_into(
+                            store, prompts, lens,
+                            [s for _, _, s in admits]))
                     dt = time.monotonic() - t0
                     report.prefill_s += dt
+                    report.prefill_calls += 1
+                    # TTFT: arrival (run start — all requests arrive
+                    # together) to the end of this admission group's
+                    # prefill; the group's cost enters each member once
+                    ttft = time.monotonic() - t_start
                     for j, (r, prompt, s) in enumerate(admits):
                         tok = self._pick_one(logits[j], r.rid, 0, key)
                         stats = RequestStats(rid=r.rid,
                                              prompt_len=prompt.shape[0],
                                              tokens=[tok],
                                              admitted_step=step,
-                                             slot=s, prefill_s=dt)
+                                             slot=s, group=group,
+                                             prefill_s=dt, ttft_s=ttft)
+                        tr.metrics.observe("serve/ttft_s", ttft)
                         slot = _Slot(r, stats, self._limit(r),
                                      next_pos=prompt.shape[0], last_tok=tok,
                                      t_admit=t0)
@@ -217,12 +240,16 @@ class Scheduler:
                 toks[s, 0] = slot.last_tok
                 pos[s] = slot.next_pos
             t0 = time.monotonic()
-            logits, _ = eng.decode(toks, store, pos)
-            logits = np.asarray(logits)
+            with tr.span("sched", "decode_step", step=step,
+                         slots=len(active), pages=store.pages_in_use):
+                logits, _ = eng.decode(toks, store, pos)
+                logits = np.asarray(logits)
             report.decode_s += time.monotonic() - t0
             report.decode_steps += 1
             report.slot_steps += len(active)
             report.page_steps += store.pages_in_use
+            tr.counter("sched", "active_slots", len(active))
+            tr.counter("sched", "pages_in_use", store.pages_in_use)
             step += 1
             # ---- advance / retire --------------------------------------
             for s in sorted(active):
@@ -240,7 +267,7 @@ class Scheduler:
         report.wall_s = time.monotonic() - t_start
         report.peak_pages = store.peak_pages
         report.requests.sort(key=lambda r: r.rid)
-        return report
+        return eng.attach_telemetry(report)
 
 
 def serve(engine: Engine, requests, *, callback=None) -> ServeReport:

@@ -50,7 +50,11 @@ class ParameterServer:
     def __init__(self, params_tree, *, D: int = 0, num_shards: int = 4,
                  placement: str = "default",
                  compression_ratio: Optional[float] = None,
-                 codec=None, transport=None):
+                 codec=None, transport=None, tracer=None):
+        if tracer is None:
+            from repro.obs import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         leaves, self.treedef = tree_flatten_np(params_tree)
         self.shapes = [l.shape for l in leaves]
         self.dtypes = [l.dtype for l in leaves]
@@ -127,7 +131,8 @@ class ParameterServer:
         by_shard: dict[int, list] = {}
         for upd in pending.updates:
             by_shard.setdefault(self.shard_of_leaf[upd[0]], []).append(upd)
-        with self._snapshot_lock:
+        with self.tracer.span("ps", "push_apply", wid=pending.wid,
+                              shards=len(by_shard)), self._snapshot_lock:
             for sid, ups in by_shard.items():
                 with self._locks[sid]:
                     for i, idx, vals in ups:
@@ -159,31 +164,34 @@ class ParameterServer:
         snapshot instead of re-copied — the returned arrays are shared
         between pullers and must be treated as read-only. When the puller is
         identified, the full parameter payload transits the transport."""
-        out = []
-        nbytes = 0
-        hits = 0
-        for i, f in enumerate(self.flat):
-            sid = self.shard_of_leaf[i]
-            with self._locks[sid]:
-                ver = self._shard_version[sid]
-                cached = self._leaf_cache[i]
-                if cached is not None and cached[0] == ver:
-                    arr = cached[1]
-                    hits += 1
-                else:
-                    # astype always copies, detaching the snapshot from flat
-                    arr = (f.reshape(self.shapes[i])
-                           .astype(self.dtypes[i]))
-                    # the snapshot is shared between pullers and with the
-                    # cache: an in-place mutation must fail loudly, not
-                    # corrupt every other worker's view
-                    arr.flags.writeable = False
-                    self._leaf_cache[i] = (ver, arr)
-            out.append(arr)
-            nbytes += f.nbytes
-        with self._stats_lock:
-            self.pull_count += 1
-            self.pull_cache_hits += hits
+        with self.tracer.span("ps", "pull_serve",
+                              wid=wid if wid is not None else "snapshot"):
+            out = []
+            nbytes = 0
+            hits = 0
+            for i, f in enumerate(self.flat):
+                sid = self.shard_of_leaf[i]
+                with self._locks[sid]:
+                    ver = self._shard_version[sid]
+                    cached = self._leaf_cache[i]
+                    if cached is not None and cached[0] == ver:
+                        arr = cached[1]
+                        hits += 1
+                    else:
+                        # astype always copies, detaching the snapshot from
+                        # flat
+                        arr = (f.reshape(self.shapes[i])
+                               .astype(self.dtypes[i]))
+                        # the snapshot is shared between pullers and with the
+                        # cache: an in-place mutation must fail loudly, not
+                        # corrupt every other worker's view
+                        arr.flags.writeable = False
+                        self._leaf_cache[i] = (ver, arr)
+                out.append(arr)
+                nbytes += f.nbytes
+            with self._stats_lock:
+                self.pull_count += 1
+                self.pull_cache_hits += hits
         if wid is not None:
             sec = self.transport.send("ps", wid, nbytes)
             with self._stats_lock:
@@ -203,7 +211,7 @@ class ParameterServer:
         """(params_tree, meta) snapshotted atomically with respect to pushes:
         the weights include exactly the waves the clocks count, so a resume
         neither loses nor double-applies an in-flight async push."""
-        with self._snapshot_lock:
+        with self.tracer.span("ps", "snapshot"), self._snapshot_lock:
             params = self.pull()
             meta = {"clocks": dict(self.clock.state.clocks),
                     "push_count": self.push_count}

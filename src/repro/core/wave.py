@@ -40,6 +40,24 @@ def dp_axes(mesh: Mesh):
     return tuple(a for a in ("pod", D_AX) if a in mesh.axis_names)
 
 
+def tick_schedule(stages: int, nm: int, *, overlap: bool = False
+                  ) -> tuple[list, int]:
+    """The pipeline schedule pipeline_wave executes, as data: a list of
+    (stage, tick, mb) entries — mb = -1 for bubble ticks — plus the tick
+    count. Microbatch j reaches stage s at tick j + skew*s (skew 2 under
+    the software-pipelined overlap schedule, else 1), exactly the mb_idx
+    arithmetic in pipeline_wave.tick. Observability renders this as
+    per-stage trace tracks; bubble fraction = 1 - nm*stages/len(entries)."""
+    skew = 2 if overlap else 1
+    ticks = nm + skew * (stages - 1)
+    sched = []
+    for s in range(stages):
+        for t in range(ticks):
+            mb = t - skew * s
+            sched.append((s, t, mb if 0 <= mb < nm else -1))
+    return sched, ticks
+
+
 def n_dp(mesh: Mesh) -> int:
     axes = dp_axes(mesh)
     return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1

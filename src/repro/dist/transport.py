@@ -79,7 +79,7 @@ class NullTransport:
 
 class SimulatedTransport(NullTransport):
     def __init__(self, topology, *, time_scale: float = 1.0,
-                 max_sleep_per_msg: float = 0.25):
+                 max_sleep_per_msg: float = 0.25, tracer=None):
         super().__init__()
         self.topology = topology
         self.time_scale = float(time_scale)
@@ -87,6 +87,10 @@ class SimulatedTransport(NullTransport):
         self._link_locks: dict[str, threading.Lock] = defaultdict(
             threading.Lock)
         self._reg_lock = threading.Lock()
+        if tracer is None:
+            from repro.obs import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
 
     def _lock_for(self, link_name: str) -> threading.Lock:
         with self._reg_lock:
@@ -105,11 +109,16 @@ class SimulatedTransport(NullTransport):
         if cost <= 0:
             return AsyncSend(0.0)
         delay = min(cost * self.time_scale, self.max_sleep_per_msg)
+        tracer = self.tracer
 
         def waiter():
             # holding the link lock while sleeping serializes transfers that
             # share the link — concurrent pushers contend for bandwidth
-            with self._lock_for(name):
-                time.sleep(delay)
+            # (the span covers queueing *and* the wire, so per-link tracks
+            # show contention as back-to-back transfers)
+            with tracer.span(f"link:{name}", "send", src=src, dst=dst,
+                             bytes=nbytes, modeled_s=cost):
+                with self._lock_for(name):
+                    time.sleep(delay)
 
         return AsyncSend(cost, waiter)

@@ -54,6 +54,10 @@ def build_parser() -> argparse.ArgumentParser:
                          "queue by slack, FIFO among ties; the synthetic "
                          "requests get staggered deadlines so the order "
                          "actually differs from FIFO)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of the run, with the metrics snapshot "
+                         "embedded; inspect with python -m repro.obs.summary")
     return ap
 
 
@@ -96,7 +100,9 @@ def main(argv=None):
                                 page_size=a.page_size,
                                 max_pages=a.max_pages),
                 run=RunSpec(backend=a.backend))
-    eng = Engine(plan)
+    from repro.obs import NULL_TRACER, Tracer
+    tracer = Tracer() if a.trace else NULL_TRACER
+    eng = Engine(plan, tracer=tracer)
 
     if a.requests:
         rng = np.random.default_rng(1)
@@ -113,6 +119,8 @@ def main(argv=None):
                         deadline=deadline(i))
                 for i in range(a.requests)]
         rep = Scheduler(eng, policy=a.policy).run(reqs)
+        if a.trace:
+            print(f"trace: {tracer.export(a.trace)}")
         occ = rep.occupancy()       # None when no decode step ran (gen=1)
         pu = rep.page_utilization()
         print(f"arch={cfg.name} backend={a.backend} requests={a.requests} "
@@ -125,11 +133,15 @@ def main(argv=None):
               f" util={'n/a' if pu is None else f'{pu:.2f}'}")
         lat = sorted(r.latency_s for r in rep.requests)
         print(f"latency: p50={lat[len(lat) // 2] * 1e3:.1f}ms "
-              f"max={lat[-1] * 1e3:.1f}ms")
+              f"max={lat[-1] * 1e3:.1f}ms "
+              f"ttft={rep.mean_ttft() * 1e3:.1f}ms "
+              f"({rep.prefill_calls} prefill groups)")
         print("generated ids[rid=0]:", rep.requests[0].tokens)
         return
 
     rep = eng.generate()
+    if a.trace:
+        print(f"trace: {tracer.export(a.trace)}")
     print(f"arch={cfg.name} backend={a.backend} batch={a.batch} "
           f"prefill({a.prompt_len} tok)={rep.prefill_s * 1e3:.1f}ms "
           f"decode {rep.decode_steps} steps={rep.decode_s * 1e3:.1f}ms "

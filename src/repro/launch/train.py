@@ -61,6 +61,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="spmd mode: fake host device count (data*stage*tp)")
     ap.add_argument("--mesh", default="2,2,2",
                     help="spmd mode: data,stage,tp")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of the run, with the metrics snapshot "
+                         "embedded; inspect with python -m repro.obs.summary")
     return ap
 
 
@@ -88,6 +92,9 @@ def main(argv=None):
     from repro.api import ClusterSpec, Engine, PartitionSpec, Plan, \
         RunSpec, WSP
     from repro.configs import ARCHS, reduced as make_reduced
+    from repro.obs import NULL_TRACER, Tracer
+
+    tracer = Tracer() if a.trace else NULL_TRACER
 
     cfg = ARCHS[a.arch]
     if a.reduced:
@@ -118,8 +125,10 @@ def main(argv=None):
                         compression_ratio=a.compression, codec=a.codec,
                         ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
                         resume=a.resume))
-        eng = Engine(plan)
+        eng = Engine(plan, tracer=tracer)
         rep = eng.fit()
+        if a.trace:
+            print(f"trace: {tracer.export(a.trace)}")
         xs, ys = rep.loss_curve()
         print(f"waves={rep.waves} wall={rep.wall_s:.1f}s "
               f"first_loss={ys[0]:.4f} last_loss={np.mean(ys[-5:]):.4f}")
@@ -148,7 +157,7 @@ def main(argv=None):
                     overlap=a.overlap, resume=a.resume,
                     ckpt_dir=a.ckpt_dir,
                     ckpt_every=a.ckpt_every if a.ckpt_dir else 0))
-    eng = Engine(plan)
+    eng = Engine(plan, tracer=tracer)
     n_dev = len(jax.devices())
     print(f"mesh=({dsz},{ssz},{tsz}) devices={n_dev}")
 
@@ -157,6 +166,8 @@ def main(argv=None):
             print(f"wave {w:4d} loss={loss:.4f} ({dt:.2f}s)")
 
     eng.fit(callback=log)
+    if a.trace:
+        print(f"trace: {tracer.export(a.trace)}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,9 @@ from typing import Callable, Optional
 import jax
 import numpy as np
 
+from repro.obs import NULL_TRACER, emit_pipeline_ticks
+from repro.obs.metrics import INT_BOUNDS, SECONDS_BOUNDS
+
 
 @dataclass
 class VWMetrics:
@@ -52,9 +55,9 @@ class _Outbox(threading.Thread):
     """Per-worker background pusher: drains queued deltas into the PS in
     FIFO order, paying the transport delay off the worker's critical path."""
 
-    def __init__(self, wid: str, ps):
+    def __init__(self, wid: str, ps, tracer=NULL_TRACER):
         super().__init__(daemon=True, name=f"{wid}-outbox")
-        self.wid, self.ps = wid, ps
+        self.wid, self.ps, self.tracer = wid, ps, tracer
         self._q: queue.Queue = queue.Queue()
 
     def submit(self, deltas) -> _PushHandle:
@@ -71,10 +74,13 @@ class _Outbox(threading.Thread):
             if item is None:
                 return
             deltas, h = item
-            try:
-                h.clock = self.ps.push_wave(self.wid, deltas)
-            except Exception as e:          # surfaced at the next await
-                h.exc = e
+            # the push span covers the in-flight segment: transport delay +
+            # apply + clock advance, on the worker's outbox track
+            with self.tracer.span(f"{self.wid}/outbox", "push"):
+                try:
+                    h.clock = self.ps.push_wave(self.wid, deltas)
+                except Exception as e:      # surfaced at the next await
+                    h.exc = e
             h.landed_at = time.monotonic()
             h.event.set()
 
@@ -86,7 +92,8 @@ class VirtualWorker(threading.Thread):
                  straggle_fn: Optional[Callable[[int], float]] = None,
                  stop_event: Optional[threading.Event] = None,
                  fail_at_wave: Optional[int] = None,
-                 async_push: bool = False):
+                 async_push: bool = False,
+                 tracer=None, D: Optional[int] = None, tick_plan=None):
         super().__init__(daemon=True, name=wid)
         self.wid, self.ps, self.wave_step = wid, ps, wave_step
         self.loader, self.opt_state = loader, opt_state
@@ -95,6 +102,12 @@ class VirtualWorker(threading.Thread):
         self.stop_event = stop_event or threading.Event()
         self.fail_at_wave = fail_at_wave
         self.async_push = async_push
+        # observability: D is the Plan's staleness bound (audited per wave),
+        # tick_plan the (schedule, ticks) modeled pipeline rendered under
+        # each wave span (core.wave.tick_schedule output)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.audit_D = D
+        self.tick_plan = tick_plan
         self.metrics = VWMetrics()
         self.failed = False
         self.params = None
@@ -125,11 +138,12 @@ class VirtualWorker(threading.Thread):
 
     def run(self):
         t_start = time.monotonic()
+        tr = self.tracer
         self.ps.register(self.wid)
         self.params = self.ps.pull(self.wid)
         wave = self.ps.clock.local_clock(self.wid)
         if self.async_push:
-            self._outbox = _Outbox(self.wid, self.ps)
+            self._outbox = _Outbox(self.wid, self.ps, tracer=tr)
             self._outbox.start()
         try:
             while wave < self.max_waves and not self.stop_event.is_set():
@@ -141,27 +155,55 @@ class VirtualWorker(threading.Thread):
                 # gate at the logical clock: `wave` counts enqueued pushes,
                 # so the staleness predicate matches the blocking runtime
                 # even while a push is still in flight
+                tg = tr.now()
                 if not self.ps.wait_pull_allowed(self.wid, timeout=120.0,
                                                  at_clock=wave):
                     break
+                tg1 = tr.now()
+                if tg1 - tg > 1e-4:     # only waits, not instant passes
+                    tr.add_span(self.wid, "gate_wait", tg, tg1, wave=wave)
+                tr.metrics.observe("train/wait_s", tg1 - tg,
+                                   bounds=SECONDS_BOUNDS)
+                # staleness this wave runs at: my clock minus the slowest
+                # worker's. The gate just guaranteed stale <= D and the
+                # global clock only grows, so any sample > D is a protocol
+                # violation — this is the audit the summary CLI enforces.
+                stale = wave - self.ps.clock.global_clock()
+                tr.metrics.observe("wsp/staleness", float(stale),
+                                   bounds=INT_BOUNDS)
+                tr.counter(self.wid, "staleness", stale)
+                if self.audit_D is not None and stale > self.audit_D:
+                    tr.instant(self.wid, "staleness_violation",
+                               wave=wave, stale=stale, D=self.audit_D)
+                    tr.metrics.counter_inc("wsp/staleness_violations")
                 t0 = time.monotonic()
-                x, y = self.loader.next()
-                deltas, self.opt_state, loss = self.wave_step(
-                    self.params, self.opt_state, x, y)
-                loss = float(loss)
-                extra = self.slowdown
-                if self.straggle_fn is not None:
-                    extra += self.straggle_fn(wave)
-                if extra > 0:
-                    time.sleep(extra)
+                with tr.span(self.wid, "wave", wave=wave):
+                    x, y = self.loader.next()
+                    deltas, self.opt_state, loss = self.wave_step(
+                        self.params, self.opt_state, x, y)
+                    loss = float(loss)
+                    extra = self.slowdown
+                    if self.straggle_fn is not None:
+                        extra += self.straggle_fn(wave)
+                    if extra > 0:
+                        time.sleep(extra)
+                if self.tick_plan is not None and tr.enabled:
+                    # render the modeled intra-VW pipeline (stages ×
+                    # microbatch ticks) scaled into the measured wave window
+                    sched, ticks = self.tick_plan
+                    emit_pipeline_ticks(tr, self.wid, sched, ticks,
+                                        t0, time.monotonic())
                 if self._outbox is not None:
                     # pushes land in order: wave w-1 must be applied before
                     # wave w's transfer may complete
                     self._await_inflight(compute_span=(t0, time.monotonic()))
                     self._inflight = self._outbox.submit(deltas)
+                    tr.instant(self.wid, "push_enqueue", wave=wave)
                     wave += 1
                 else:
-                    wave = self.ps.push_wave(self.wid, deltas)
+                    with tr.span(self.wid, "push", wave=wave):
+                        wave = self.ps.push_wave(self.wid, deltas)
+                tr.counter(self.wid, "clock", wave)
                 # local weights see their own wave immediately (paper Sec. 4)
                 # — unless the pull below replaces them wholesale anyway
                 if self.pull_every != 1:
@@ -170,8 +212,9 @@ class VirtualWorker(threading.Thread):
                                                             deltas))
                 if self.pull_every and wave % self.pull_every == 0:
                     # a pull must include this worker's own landed wave
-                    self._await_inflight()
-                    self.params = self.ps.pull(self.wid)
+                    with tr.span(self.wid, "pull", wave=wave):
+                        self._await_inflight()
+                        self.params = self.ps.pull(self.wid)
                 self.metrics.losses.append(loss)
                 self.metrics.wave_times.append(time.monotonic() - t0)
                 self.metrics.wall_clock.append(time.monotonic() - t_start)
