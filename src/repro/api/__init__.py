@@ -23,6 +23,13 @@ batched prefill + autoregressive decode through
 backend='spmd', the forward_ref cache path on 'threads'), and
 `repro.api.serving` adds a continuous-batching request scheduler returning
 a `ServeReport`.
+
+Fault scenarios ride the Plan too: `Plan(faults=FaultPlan(...),
+fault_policy=FaultPolicy(...))` injects deterministic, seeded failures
+(link outages/loss, worker crashes and slowdowns, PS stalls, serve slot
+faults) into the threaded runtime and the Scheduler, with retry/backoff,
+heartbeat-driven eviction + elastic rejoin, and graceful serve-side
+degradation as the recovery surface (see repro.faults).
 """
 from repro.api.engine import Engine
 from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
@@ -31,10 +38,16 @@ from repro.api.presets import PRESETS, get_preset, list_presets
 from repro.api.report import (RequestStats, ServeReport, Telemetry,
                               TrainReport)
 from repro.api.sync import ASP, BSP, SyncPolicy, UNBOUNDED_D, WSP
+from repro.faults import (DegradedRunError, FaultPlan, FaultPolicy,
+                          GateTimeout, LinkFault, PSStall, PushTimeout,
+                          SlotFault, TransportError, WorkerCrash,
+                          WorkerSlowdown)
 
 __all__ = [
-    "ASP", "BSP", "ClusterSpec", "Engine", "PartitionSpec", "Plan",
-    "PRESETS", "RequestStats", "RunSpec", "ServeReport", "ServeSpec",
-    "SyncPolicy", "Telemetry", "TrainReport", "UNBOUNDED_D", "WSP",
-    "get_preset", "list_presets",
+    "ASP", "BSP", "ClusterSpec", "DegradedRunError", "Engine", "FaultPlan",
+    "FaultPolicy", "GateTimeout", "LinkFault", "PSStall", "PartitionSpec",
+    "Plan", "PRESETS", "PushTimeout", "RequestStats", "RunSpec",
+    "ServeReport", "ServeSpec", "SlotFault", "SyncPolicy", "Telemetry",
+    "TrainReport", "TransportError", "UNBOUNDED_D", "WSP", "WorkerCrash",
+    "WorkerSlowdown", "get_preset", "list_presets",
 ]

@@ -75,6 +75,8 @@ class Engine:
         self.topology = None
         self.workers: dict[str, VirtualWorker] = {}
         self.stop_event = threading.Event()
+        self.supervisor = None     # FleetSupervisor when fault-supervised
+        self._injector = None      # lazy FaultInjector from plan.faults
         self.report: Optional[TrainReport] = None
         self._source = None
         self._step_ctx = None      # lazy state for step()
@@ -121,6 +123,17 @@ class Engine:
         if self._source is None:
             self._source = MarkovLM(plan.vocab, seed=run.data_seed)
 
+    def fault_injector(self):
+        """The run's FaultInjector, built once from Plan.faults (None when
+        the Plan carries no fault scenario). Shared by every seam — the
+        transport, the PS and the Scheduler consult the same per-path /
+        per-push / per-step counters."""
+        if self._injector is None and self.plan.faults is not None:
+            from repro.faults import FaultInjector
+            self._injector = FaultInjector(
+                self.plan.faults, time_scale=self.plan.cluster.time_scale)
+        return self._injector
+
     def _ensure_ps(self, policy: WSP):
         if self.ps is not None:
             return
@@ -129,15 +142,21 @@ class Engine:
         if isinstance(topo, str):
             topo = make_topology(topo, plan.cluster.num_vw)
         self.topology = topo
+        injector = self.fault_injector()
+        fpol = plan.fault_policy
         transport = (SimulatedTransport(topo,
                                         time_scale=plan.cluster.time_scale,
-                                        tracer=self.tracer)
+                                        tracer=self.tracer,
+                                        injector=injector, policy=fpol)
                      if topo is not None else None)
+        if transport is None and injector is not None:
+            from repro.dist.transport import NullTransport
+            transport = NullTransport(injector=injector, policy=fpol)
         self.ps = ParameterServer(
             self._params, D=policy.D,
             compression_ratio=plan.run.compression_ratio,
             codec=plan.run.codec, transport=transport,
-            tracer=self.tracer)
+            tracer=self.tracer, injector=injector)
 
     def _loader(self, i: int, num_vw: int) -> ShardedLoader:
         run = self.plan.run
@@ -236,8 +255,8 @@ class Engine:
             }
         ctx = self._step_ctx
         wid = ctx["wid"]
-        if not self.ps.wait_pull_allowed(wid, timeout=120.0):
-            raise TimeoutError(f"{wid}: staleness gate never opened")
+        # raises the typed GateTimeout if the gate never opens
+        self.ps.gate(wid, timeout=self.plan.fault_policy.gate_timeout_s)
         with self.tracer.span("engine", "step"):
             x, y = ctx["loader"].next()
             deltas, ctx["opt_state"], loss = self._wave_step(
@@ -641,10 +660,18 @@ class Engine:
     # ------------------------------------------------------------------
     # threads backend: WSP / ASP (policy.execute lands here)
     # ------------------------------------------------------------------
-    def _make_worker(self, i: int, wid: str, policy: WSP) -> VirtualWorker:
+    def _make_worker(self, i: int, wid: str, policy: WSP, *,
+                     successor: bool = False) -> VirtualWorker:
         cl = self.plan.cluster
         speeds = cl.speeds or (0.0,) * cl.num_vw
         straggle = cl.straggle_fns or (None,) * cl.num_vw
+        injector = self.fault_injector()
+        # a rejoined successor does not replay its predecessor's death: the
+        # crash / fail_at anchors belong to the original incarnation only
+        # (slowdown persists — the *node* is slow, not the process)
+        crash_at = None
+        if injector is not None and not successor:
+            crash_at = injector.crash_wave(i)
         return VirtualWorker(
             wid, self.ps, self._wave_step, self._loader(i, cl.num_vw),
             self._optimizer.init(self.ps.pull()),
@@ -652,9 +679,11 @@ class Engine:
             pull_every=policy.pull_every,
             slowdown=speeds[i], straggle_fn=straggle[i],
             stop_event=self.stop_event,
-            fail_at_wave=cl.fail_map().get(i),
+            fail_at_wave=None if successor else cl.fail_map().get(i),
             async_push=policy.async_push,
-            tracer=self.tracer, D=policy.D, tick_plan=self._tick_plan())
+            tracer=self.tracer, D=policy.D, tick_plan=self._tick_plan(),
+            injector=injector, vw_index=i, crash_at=crash_at,
+            gate_timeout_s=self.plan.fault_policy.gate_timeout_s)
 
     def _fit_threaded(self, policy: WSP, *,
                       rejoin_failed_after: Optional[float] = None,
@@ -684,33 +713,43 @@ class Engine:
             self.workers[wid] = self._make_worker(i, wid, policy)
             self.workers[wid].start()
         ckpt_step = 0
-        rejoined: set[str] = set()
-        periodic = bool(run.ckpt_dir and run.ckpt_every) \
-            or rejoin_failed_after is not None
+        fpol = plan.fault_policy
+        if rejoin_failed_after is not None:
+            # the legacy knob, promoted onto the first-class FaultPolicy:
+            # rejoin each failed worker once, this many seconds after its
+            # eviction was recorded
+            import dataclasses as dc
+            fpol = dc.replace(fpol, rejoin_delay_s=rejoin_failed_after,
+                              rejoin_max=max(1, fpol.rejoin_max))
+        supervise = fpol.evict_lag > 0 or fpol.rejoins \
+            or plan.faults is not None
+        if supervise:
+            from repro.faults import FleetSupervisor
+
+            def spawn(i: int, new_wid: str):
+                nw = self._make_worker(i, new_wid, policy, successor=True)
+                self.workers[new_wid] = nw
+                nw.start()
+                return nw
+
+            self.supervisor = FleetSupervisor(
+                self.ps, self.workers, fpol, spawn=spawn,
+                topology=self.topology, tracer=self.tracer)
+        periodic = bool(run.ckpt_dir and run.ckpt_every) or supervise
         if not periodic:
             # nothing to supervise: block on the (fixed) worker set directly
             for w in list(self.workers.values()):
                 w.join()
-        while periodic and any(w.is_alive() for w in self.workers.values()):
+        tick = min(0.25, fpol.heartbeat_every_s) if supervise else 0.25
+        while periodic and (
+                any(w.is_alive() for w in self.workers.values())
+                or (self.supervisor is not None
+                    and self.supervisor.pending_rejoin())):
             # wake on wave completion / worker exit rather than busy-polling
-            self.ps.push_event.wait(timeout=0.25)
+            self.ps.push_event.wait(timeout=tick)
             self.ps.push_event.clear()
-            # elastic re-join of failed workers
-            if rejoin_failed_after is not None:
-                for wid, w in list(self.workers.items()):
-                    if (w.failed and not w.is_alive() and wid not in rejoined
-                            and time.monotonic() - t0 > rejoin_failed_after):
-                        rejoined.add(wid)
-                        i = int(wid[2:].rstrip("r"))
-                        if (self.topology is not None
-                                and f"vw{i}" in self.topology.pod_of):
-                            # the re-joined worker lives on the failed one's
-                            # node as far as the network model is concerned
-                            self.topology.add_alias(wid + "r", f"vw{i}")
-                        nw = self._make_worker(i, wid + "r", policy)
-                        nw.fail_at_wave = None
-                        self.workers[wid + "r"] = nw
-                        nw.start()
+            if self.supervisor is not None:
+                self.supervisor.poll()
             # periodic checkpoint (PS + clocks, snapshotted atomically)
             if run.ckpt_dir and run.ckpt_every:
                 gc = self.ps.clock.global_clock()
@@ -735,12 +774,41 @@ class Engine:
             report.waves += w.metrics.waves
             report.overlap_seconds += w.metrics.overlap_seconds
             report.push_wait_seconds += w.metrics.push_wait_seconds
+            report.gate_timeouts += w.metrics.gate_timeouts
+            if w.failed:
+                report.crashes += 1
+        report.waves_requested = run.max_waves * num_vw
         report.wall_s = time.monotonic() - t0
         report.wait_seconds = dict(self.ps.clock.wait_seconds)
         report.bytes_pushed = self.ps.bytes_pushed
         report.bytes_wire = self.ps.bytes_wire
         report.comm_seconds = self.ps.comm_seconds
         report.comm = self.ps.transport.stats()
+        report.late_pushes = self.ps.late_pushes
+        report.ps_stalls = self.ps.ps_stalls
+        report.drops = report.comm.get("drops", 0)
+        report.retries = report.comm.get("retries", 0)
+        if self.supervisor is not None:
+            report.evictions = [(e.wid, e.at_clock, e.reason, e.rejoined)
+                                for e in self.supervisor.evictions]
+            report.rejoins = list(self.supervisor.rejoins)
+        # fail loudly on silent degradation: a run that timed out at the
+        # staleness gate, or lost a worker to a typed fault without a
+        # successor taking over, did NOT do the work the Plan requested.
+        # FaultPolicy(allow_degraded=True) opts into getting the (counter-
+        # annotated) report back instead.
+        if not fpol.allow_degraded:
+            degraded = []
+            for wid, w in self.workers.items():
+                if w.metrics.gate_timeouts:
+                    degraded.append(f"{wid}: staleness gate timed out")
+                elif w.error is not None and (wid + "r") not in self.workers:
+                    degraded.append(f"{wid}: {w.error}")
+            if degraded:
+                from repro.faults import DegradedRunError
+                raise DegradedRunError(
+                    "run completed degraded (set FaultPolicy.allow_degraded "
+                    "to accept): " + "; ".join(degraded), report=report)
         return report
 
     # ------------------------------------------------------------------

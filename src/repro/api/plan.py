@@ -21,6 +21,9 @@ from typing import Any, Optional
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.api.sync import BSP, SyncPolicy, WSP
+from repro.faults.plan import (FaultPlan, FaultPolicy, SERVE_EVENTS,
+                               TRAIN_EVENTS, LinkFault, PSStall, SlotFault,
+                               WorkerCrash, WorkerSlowdown)
 
 
 @dataclass(frozen=True)
@@ -130,6 +133,8 @@ class Plan:
     sync: SyncPolicy = field(default_factory=WSP)
     run: RunSpec = field(default_factory=RunSpec)
     serve: Optional[ServeSpec] = None
+    faults: Optional[FaultPlan] = None
+    fault_policy: FaultPolicy = field(default_factory=FaultPolicy)
 
     def __post_init__(self):
         self.validate()
@@ -288,8 +293,76 @@ class Plan:
                     "(num_vw/speeds/straggle_fns/fail_at) only drive the "
                     "threaded fleet — unset them or use backend='threads'")
 
+        self._validate_faults()
         if self.serve is not None:
             self._validate_serve()
+
+    def _validate_faults(self) -> None:
+        """Fault scenarios are validated against the Plan they ride: event
+        indices must land inside the fleet/run/batch, train events need a
+        train Plan (and vice versa), and the threaded PS runtime is the
+        only backend with fault seams."""
+        if not isinstance(self.fault_policy, FaultPolicy):
+            raise TypeError(f"fault_policy must be a FaultPolicy, got "
+                            f"{self.fault_policy!r}")
+        if self.faults is None:
+            return
+        if not isinstance(self.faults, FaultPlan):
+            raise TypeError(f"faults must be a FaultPlan, got "
+                            f"{self.faults!r}")
+        cl, run, pol = self.cluster, self.run, self.fault_policy
+        serving = self.serve is not None
+        if serving:
+            bad = self.faults.of_type(*TRAIN_EVENTS)
+            if bad:
+                raise ValueError(
+                    f"this Plan serves; training fault events "
+                    f"{sorted({type(e).__name__ for e in bad})} would "
+                    f"silently never fire — use SlotFault (or drop faults)")
+            for ev in self.faults.of_type(SlotFault):
+                if ev.slot >= self.serve.max_batch:
+                    raise ValueError(
+                        f"SlotFault names slot {ev.slot} outside the decode "
+                        f"batch (max_batch={self.serve.max_batch})")
+            return
+        bad = self.faults.of_type(*SERVE_EVENTS)
+        if bad:
+            raise ValueError(
+                "SlotFault is a serving fault; this Plan trains — use the "
+                "training events (LinkFault/WorkerCrash/WorkerSlowdown/"
+                "PSStall) or set Plan.serve")
+        if run.backend != "threads" or isinstance(self.sync, BSP):
+            raise ValueError(
+                "fault injection seams live in the threaded parameter-"
+                "server runtime (transport, PS, worker fleet); the "
+                f"{'spmd' if run.backend != 'threads' else 'BSP'} backend "
+                f"has none of them — drop Plan.faults or use "
+                f"backend='threads' with a WSP policy")
+        for ev in self.faults.of_type(WorkerCrash, WorkerSlowdown):
+            if ev.vw >= cl.num_vw:
+                raise ValueError(
+                    f"{type(ev).__name__} names worker {ev.vw} outside the "
+                    f"fleet (num_vw={cl.num_vw}); that fault would silently "
+                    f"never be injected")
+            if ev.wave >= run.max_waves:
+                raise ValueError(
+                    f"{type(ev).__name__}(vw={ev.vw}) anchors at wave "
+                    f"{ev.wave} but the run stops after "
+                    f"{run.max_waves} waves")
+        crashes = self.faults.of_type(WorkerCrash)
+        if crashes and cl.num_vw > 1 and pol.evict_lag <= 0:
+            raise ValueError(
+                "a WorkerCrash dies without deregistering: survivors stall "
+                "at the staleness gate until the crashed worker is evicted. "
+                "Set FaultPolicy.evict_lag (<= D) so the supervisor detects "
+                "and evicts it, or drop the crash event")
+        if crashes and pol.evict_lag > 0 and isinstance(self.sync, WSP) \
+                and pol.evict_lag > max(1, self.sync.D):
+            raise ValueError(
+                f"FaultPolicy.evict_lag={pol.evict_lag} exceeds the "
+                f"staleness bound D={self.sync.D}: survivors deadlock at "
+                f"the gate before the lag detector can fire — set "
+                f"evict_lag <= max(1, D)")
 
     def _validate_serve(self) -> None:
         """Serve-mode Plans: reject train-only knobs the serve path would

@@ -75,6 +75,41 @@ class TrainReport:
     overlap_seconds: float = 0.0                    # comm hidden under compute
     push_wait_seconds: float = 0.0                  # comm NOT hidden (blocked)
     comm: dict = field(default_factory=dict)        # transport link stats
+    # fault / recovery accounting (repro.faults; zeros on fault-free runs)
+    waves_requested: int = 0    # max_waves * initial fleet size
+    gate_timeouts: int = 0      # staleness gates that timed out (loud, not
+                                # silent: fit() raises DegradedRunError
+                                # unless FaultPolicy.allow_degraded)
+    crashes: int = 0            # workers that died (injected or fail_at)
+    late_pushes: int = 0        # pushes applied after the pusher left the
+                                # clock (delta kept, clock untouched)
+    ps_stalls: int = 0          # injected parameter-server apply stalls
+    drops: int = 0              # transport attempts dropped
+    retries: int = 0            # transport retries issued
+    evictions: list = field(default_factory=list)   # (wid, at_clock,
+                                                    #  reason, rejoined)
+    rejoins: list = field(default_factory=list)     # successor wids
+
+    def fault_digest(self) -> dict:
+        """The run's canonical fault/recovery record, restricted to fields
+        that are a deterministic function of the Plan: every entry is
+        anchored to logical indices (wave numbers, per-path attempt
+        counters), never to host timing. Two runs of the same seeded
+        scenario must produce equal digests — the chaos suite's
+        determinism assertion. Timing-sensitive observations (total waves
+        including a rejoiner's, late_pushes, eviction clocks) stay on the
+        report but out of the digest."""
+        return {
+            "waves_requested": self.waves_requested,
+            "gate_timeouts": self.gate_timeouts,
+            "crashes": self.crashes,
+            "drops": self.drops,
+            "retries": self.retries,
+            "drops_by_link": dict(self.comm.get("drops_by_link", {})),
+            "retries_by_link": dict(self.comm.get("retries_by_link", {})),
+            "evictions": sorted((w, r) for w, _, r, _ in self.evictions),
+            "rejoins": sorted(self.rejoins),
+        }
 
     def loss_curve(self):
         """(wall_s, loss) arrays in wall-clock order. Sorts by the timestamp
@@ -115,6 +150,10 @@ class RequestStats:
     ttft_s: float = 0.0         # arrival -> first token (end of this
                                 # request's prefill group), wall clock
     latency_s: float = 0.0      # admission -> last token (wall clock)
+    retries: int = 0            # slot-fault recoveries this request took
+    shed: bool = False          # refused admission under fault pressure
+    failed: bool = False        # retired without completing (retry budget
+                                # exhausted)
 
     @property
     def new_tokens(self) -> int:
@@ -146,6 +185,13 @@ class ServeReport:
     peak_pages: int = 0         # high-water mark of pages in use
     page_steps: int = 0         # sum over decode steps of pages in use
     admit_blocked: int = 0      # admission rounds refused: pool exhausted
+    # fault / recovery accounting (repro.faults; zeros on fault-free runs)
+    slot_faults: int = 0        # injected slot faults taken
+    requeues: int = 0           # requests re-admitted after a slot fault
+    reprefills: int = 0         # slots rebuilt in place from their pages
+    quarantined: int = 0        # slots removed from the free pool
+    shed: int = 0               # requests refused under fault pressure
+    failed_requests: int = 0    # retired incomplete (retry budget spent)
     telemetry: Optional[Telemetry] = None  # when tracing is enabled
 
     @property

@@ -66,12 +66,15 @@ class Request:
 class _Slot:
     """An in-flight request occupying one decode-batch row."""
 
-    __slots__ = ("req", "stats", "limit", "next_pos", "last_tok", "t_admit")
+    __slots__ = ("req", "stats", "limit", "next_pos", "last_tok", "t_admit",
+                 "prompt")
 
-    def __init__(self, req, stats, limit, next_pos, last_tok, t_admit):
+    def __init__(self, req, stats, limit, next_pos, last_tok, t_admit,
+                 prompt=None):
         self.req, self.stats, self.limit = req, stats, limit
         self.next_pos, self.last_tok = next_pos, last_tok
         self.t_admit = t_admit
+        self.prompt = prompt
 
 
 class Scheduler:
@@ -154,18 +157,133 @@ class Scheduler:
         step = 0
         tr = self.tracer
         t_start = time.monotonic()
+        injector = eng.fault_injector()
+        fpol = plan.fault_policy
+        quarantined: set[int] = set()
+        retries_by_rid: dict[int, int] = {}
 
         def retire(s: int, slot: _Slot):
             slot.stats.finished_step = step
             slot.stats.latency_s = time.monotonic() - slot.t_admit
             report.requests.append(slot.stats)
             store.free(s)
-            free.append(s)
-            free.sort()
+            if s not in quarantined:
+                free.append(s)
+                free.sort()
             tr.instant("sched", "retire", rid=slot.req.rid, slot=s,
                        step=step, tokens=len(slot.stats.tokens))
 
+        def shed_queue(reason: str):
+            for prompt, r in queue:
+                stats = RequestStats(rid=r.rid, prompt_len=prompt.shape[0],
+                                     shed=True)
+                report.requests.append(stats)
+                report.shed += 1
+                tr.instant("sched", "shed", rid=r.rid, step=step,
+                           reason=reason)
+                tr.metrics.counter_inc("fault/shed")
+            queue.clear()
+
+        def requeue(s: int, slot: _Slot):
+            """Recover by replay: the request goes back to the *front* of
+            the queue and re-prefills from its prompt. Token picks are
+            keyed by (rid, k), so the replayed stream is bit-identical to
+            the one a fault-free scheduler would have produced."""
+            del active[s]
+            store.free(s)
+            if s not in quarantined:
+                free.append(s)
+                free.sort()
+            queue.insert(0, (slot.prompt, slot.req))
+            report.requeues += 1
+            tr.instant("sched", "requeue", rid=slot.req.rid, slot=s,
+                       step=step, retries=slot.stats.retries)
+            tr.metrics.counter_inc("fault/requeues")
+
+        def fail_request(s: int, slot: _Slot):
+            slot.stats.failed = True
+            report.failed_requests += 1
+            tr.instant("sched", "request_failed", rid=slot.req.rid, slot=s,
+                       step=step, retries=slot.stats.retries)
+            del active[s]
+            retire(s, slot)
+
+        def try_reprefill(s: int, slot: _Slot) -> bool:
+            """Recover in place: rebuild the slot's cache by prefilling
+            prompt + already-generated tokens (the request keeps its
+            tokens; only the transient per-slot state is rebuilt). Only
+            possible while that sequence still fits the compiled prefill
+            width — False falls back to requeue."""
+            seq = np.concatenate([
+                np.asarray(slot.prompt, np.int32),
+                np.asarray(slot.stats.tokens[:-1], np.int32)])
+            if seq.shape[0] > P:
+                return False
+            del active[s]
+            store.free(s)
+            if s in quarantined:
+                if not free:
+                    return False        # no healthy slot left to rebuild on
+                s2 = free.pop(0)
+            else:
+                s2 = s
+            store.alloc(s2, slot.stats.prompt_len + slot.limit)
+            prompts = np.zeros((B, P), np.int32)
+            prompts[0, :seq.shape[0]] = seq
+            lens = np.ones(B, np.int32)
+            lens[0] = seq.shape[0]
+            t0 = time.monotonic()
+            with tr.span("sched", "reprefill", rid=slot.req.rid, slot=s2,
+                         depth=int(seq.shape[0])):
+                eng.prefill_into(store, prompts, lens, [s2])
+            report.prefill_s += time.monotonic() - t0
+            report.prefill_calls += 1
+            report.reprefills += 1
+            slot.stats.slot = s2
+            active[s2] = slot
+            tr.metrics.counter_inc("fault/reprefills")
+            return True
+
+        def inject_slot_faults():
+            """Fire this decode step's injected slot faults: quarantine the
+            slot and recover its request under the retry budget."""
+            for s in injector.slot_faults(step):
+                report.slot_faults += 1
+                tr.instant("sched", "slot_fault", slot=s, step=step)
+                tr.metrics.counter_inc("fault/slot_faults")
+                if fpol.quarantine_slots and s not in quarantined:
+                    quarantined.add(s)
+                    report.quarantined += 1
+                    if s in free:
+                        free.remove(s)
+                slot = active.get(s)
+                if slot is None:
+                    continue            # the faulted slot was empty
+                slot.stats.retries += 1
+                retries_by_rid[slot.req.rid] = slot.stats.retries
+                if slot.stats.retries > fpol.slot_retry_budget:
+                    fail_request(s, slot)
+                elif fpol.slot_recovery == "reprefill" \
+                        and try_reprefill(s, slot):
+                    pass
+                else:
+                    if s in active:     # a failed reprefill freed the slot
+                        requeue(s, slot)
+                    else:
+                        queue.insert(0, (slot.prompt, slot.req))
+                        report.requeues += 1
+                        tr.metrics.counter_inc("fault/requeues")
+
+        faulted_steps: set[int] = set()
         while queue or active:
+            # ---- graceful degradation under sustained fault pressure ----
+            if queue and fpol.shed_after_faults \
+                    and report.slot_faults >= fpol.shed_after_faults:
+                shed_queue("fault_pressure")
+            if queue and not active and not free:
+                # every slot is quarantined: nothing can ever be admitted
+                # again — shed the remainder instead of spinning forever
+                shed_queue("no_healthy_slots")
             # ---- admit: policy order into the lowest slots, page-gated --
             if free and queue:
                 admits = []
@@ -222,15 +340,23 @@ class Scheduler:
                                              tokens=[tok],
                                              admitted_step=step,
                                              slot=s, group=group,
-                                             prefill_s=dt, ttft_s=ttft)
+                                             prefill_s=dt, ttft_s=ttft,
+                                             retries=retries_by_rid.get(
+                                                 r.rid, 0))
                         tr.metrics.observe("serve/ttft_s", ttft)
                         slot = _Slot(r, stats, self._limit(r),
                                      next_pos=prompt.shape[0], last_tok=tok,
-                                     t_admit=t0)
+                                     t_admit=t0, prompt=prompt)
                         if len(stats.tokens) >= slot.limit:
                             retire(s, slot)
                         else:
                             active[s] = slot
+            # ---- injected slot faults fire at their decode step ---------
+            if injector is not None and step not in faulted_steps:
+                # consulted once per step value: a recovery that empties
+                # the batch loops back here without re-firing the fault
+                faulted_steps.add(step)
+                inject_slot_faults()
             if not active:
                 continue
             # ---- one batched decode step over every active slot ---------

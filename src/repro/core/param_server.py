@@ -50,7 +50,7 @@ class ParameterServer:
     def __init__(self, params_tree, *, D: int = 0, num_shards: int = 4,
                  placement: str = "default",
                  compression_ratio: Optional[float] = None,
-                 codec=None, transport=None, tracer=None):
+                 codec=None, transport=None, tracer=None, injector=None):
         if tracer is None:
             from repro.obs import NULL_TRACER
             tracer = NULL_TRACER
@@ -74,12 +74,15 @@ class ParameterServer:
         self._shard_version = [0] * num_shards
         self._leaf_cache: list = [None] * len(leaves)
         self.clock = WSPClockServer(D)
+        self.injector = injector          # repro.faults.FaultInjector | None
         self.push_count = 0
         self.bytes_pushed = 0
         self.bytes_wire = 0
         self.comm_seconds = 0.0
         self.pull_count = 0
         self.pull_cache_hits = 0          # leaf snapshots served from cache
+        self.late_pushes = 0              # applied after the pusher left
+        self.ps_stalls = 0                # injected apply stalls taken
         self._stats_lock = threading.Lock()   # accounting fields above
         # a wave-completion signal for the trainer's supervision loop
         self.push_event = threading.Event()
@@ -125,14 +128,40 @@ class ParameterServer:
 
     def finish_push(self, pending: PendingPush) -> int:
         """Wait for the wire, apply the update (one lock acquisition per
-        touched shard), advance the worker's WSP clock."""
+        touched shard), advance the worker's WSP clock.
+
+        Fault semantics: a transport whose retry budget is exhausted
+        surfaces here as the typed PushTimeout (the wave's delta never
+        reached the PS — nothing is applied, the clock does not move). A
+        push from a worker that was evicted while its transfer was in
+        flight still applies — the delta is a stale-but-sound gradient —
+        but never advances the departed worker's clock (`late_pushes`),
+        so eviction cannot move the global minimum past what survivors
+        gated against."""
         assert not pending.applied, "finish_push called twice"
-        pending.send.wait()
+        try:
+            pending.send.wait()
+        except Exception as e:
+            from repro.faults.errors import FaultError, PushTimeout
+            if isinstance(e, FaultError):
+                raise PushTimeout(pending.wid, e) from e
+            raise
         by_shard: dict[int, list] = {}
         for upd in pending.updates:
             by_shard.setdefault(self.shard_of_leaf[upd[0]], []).append(upd)
         with self.tracer.span("ps", "push_apply", wid=pending.wid,
                               shards=len(by_shard)), self._snapshot_lock:
+            if self.injector is not None:
+                # push_count is stable under the snapshot lock, so which
+                # push a PSStall lands on is deterministic
+                stall = self.injector.ps_stall_sleep(self.push_count)
+                if stall > 0:
+                    self.ps_stalls += 1
+                    self.tracer.instant("ps", "stall", wid=pending.wid,
+                                        push=self.push_count, seconds=stall)
+                    self.tracer.metrics.counter_inc("fault/ps_stalls")
+                    import time
+                    time.sleep(stall)
             for sid, ups in by_shard.items():
                 with self._locks[sid]:
                     for i, idx, vals in ups:
@@ -145,7 +174,12 @@ class ParameterServer:
             # counted at apply time (not issue time) so a snapshot's
             # push_count is exactly the number of pushes its weights contain
             self.push_count += 1
-            clock = self.clock.complete_wave(pending.wid)
+            clock = self.clock.complete_wave_if_registered(pending.wid)
+            if clock is None:
+                self.late_pushes += 1
+                self.tracer.instant("ps", "late_push", wid=pending.wid)
+                self.tracer.metrics.counter_inc("fault/late_pushes")
+                clock = -1
         self.push_event.set()
         return clock
 
@@ -157,6 +191,23 @@ class ParameterServer:
     def wait_pull_allowed(self, wid: str, timeout: float = 120.0,
                           at_clock: Optional[int] = None) -> bool:
         return self.clock.wait_until_allowed(wid, timeout, at_clock)
+
+    def gate(self, wid: str, timeout: float = 120.0,
+             at_clock: Optional[int] = None) -> bool:
+        """Typed staleness gate: True when `wid` may start its next wave,
+        False when it was deregistered (evicted) while waiting, and the
+        typed GateTimeout when the global clock failed to catch up within
+        `timeout` — a stuck fleet must fail loudly, never truncate
+        silently (wait_pull_allowed's boolean conflates the two)."""
+        import time as _time
+        t0 = _time.monotonic()
+        reason = self.clock.wait_reason(wid, timeout, at_clock)
+        if reason == "timeout":
+            from repro.faults.errors import GateTimeout
+            wave = at_clock if at_clock is not None else \
+                self.clock.state.clocks.get(wid, -1)
+            raise GateTimeout(wid, wave, _time.monotonic() - t0)
+        return reason == "ok"
 
     def pull(self, wid: Optional[str] = None):
         """Snapshot of w_global (consistent per leaf). Leaves whose shard

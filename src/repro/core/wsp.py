@@ -35,7 +35,9 @@ class WSPClockState:
         self.clocks[wid] = self.global_clock() if clock is None else clock
 
     def remove_worker(self, wid: str):
-        self.clocks.pop(wid)
+        # idempotent: eviction (supervisor) and self-deregistration (the
+        # worker's own exit path) may race on the same wid
+        self.clocks.pop(wid, None)
 
     def global_clock(self) -> int:
         return min(self.clocks.values()) if self.clocks else 0
@@ -96,22 +98,47 @@ class WSPClockServer:
                            at_clock: int | None = None) -> bool:
         """Block until `wid` may start its next wave. Returns False on timeout
         or if the worker was deregistered while waiting."""
+        return self.wait_reason(wid, timeout, at_clock) == "ok"
+
+    def wait_reason(self, wid: str, timeout: float = 120.0,
+                    at_clock: int | None = None) -> str:
+        """Like wait_until_allowed but disambiguates the failure:
+        'ok' | 'timeout' | 'evicted' (deregistered while waiting — the
+        supervisor pulled this worker out of the clock). The fault layer
+        needs the distinction: a timeout is a GateTimeout error, an
+        eviction is an orderly exit."""
         import time
         t0 = time.monotonic()
+        reason = "ok"
         with self._cv:
             while wid in self.state.clocks and \
                     not self.state.can_proceed(wid, at_clock):
                 remaining = timeout - (time.monotonic() - t0)
                 if remaining <= 0:
-                    return False
+                    reason = "timeout"
+                    break
                 self._cv.wait(remaining)
-            ok = wid in self.state.clocks
+            if reason == "ok" and wid not in self.state.clocks:
+                reason = "evicted"
         self.wait_seconds[wid] = self.wait_seconds.get(wid, 0.0) + (
             time.monotonic() - t0)
-        return ok
+        return reason
 
     def complete_wave(self, wid: str) -> int:
         with self._cv:
+            c = self.state.complete_wave(wid)
+            self._cv.notify_all()
+            return c
+
+    def complete_wave_if_registered(self, wid: str) -> int | None:
+        """Advance `wid`'s clock iff it is still registered; None if it was
+        deregistered (evicted) meanwhile. The async-push landing path uses
+        this so a crashed worker's in-flight push can never advance the
+        clock of a worker that has already left the fleet — which would
+        move the global minimum past what survivors gated against."""
+        with self._cv:
+            if wid not in self.state.clocks:
+                return None
             c = self.state.complete_wave(wid)
             self._cv.notify_all()
             return c

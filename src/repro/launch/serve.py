@@ -58,6 +58,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write a Chrome-trace-event JSON (Perfetto-"
                          "loadable) of the run, with the metrics snapshot "
                          "embedded; inspect with python -m repro.obs.summary")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject the seeded random fault scenario "
+                         "FaultPlan.sample_serve(SEED) — decode-slot faults "
+                         "the scheduler recovers from by quarantine + "
+                         "requeue; needs --requests")
     return ap
 
 
@@ -82,9 +87,9 @@ def main(argv=None):
         cfg = make_reduced(cfg)
 
     if not a.requests and (a.page_size or a.max_pages
-                           or a.policy != "fifo"):
+                           or a.policy != "fifo" or a.chaos is not None):
         raise SystemExit(
-            "--page-size/--max-pages/--policy drive the continuous-"
+            "--page-size/--max-pages/--policy/--chaos drive the continuous-"
             "batching scheduler; the aligned generate() path keeps the "
             "contiguous reference cache and would silently drop them — "
             "add --requests N")
@@ -93,13 +98,20 @@ def main(argv=None):
     if a.backend == "spmd":
         dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
         partition = PartitionSpec(data=dsz, stages=ssz, tp=tsz)
+    fault_kwargs = {}
+    if a.chaos is not None:
+        from repro.api import FaultPlan
+        faults = FaultPlan.sample_serve(a.chaos, max_batch=a.batch)
+        fault_kwargs = dict(faults=faults)
+        print(f"chaos: {faults.describe()}")
     plan = Plan(arch=cfg, partition=partition,
                 serve=ServeSpec(prompt_len=a.prompt_len, gen=a.gen,
                                 max_batch=a.batch,
                                 temperature=a.temperature,
                                 page_size=a.page_size,
                                 max_pages=a.max_pages),
-                run=RunSpec(backend=a.backend))
+                run=RunSpec(backend=a.backend),
+                **fault_kwargs)
     from repro.obs import NULL_TRACER, Tracer
     tracer = Tracer() if a.trace else NULL_TRACER
     eng = Engine(plan, tracer=tracer)
@@ -121,6 +133,12 @@ def main(argv=None):
         rep = Scheduler(eng, policy=a.policy).run(reqs)
         if a.trace:
             print(f"trace: {tracer.export(a.trace)}")
+        if a.chaos is not None:
+            retries = sum(r.retries for r in rep.requests)
+            print(f"faults: slot_faults={rep.slot_faults} "
+                  f"requeues={rep.requeues} reprefills={rep.reprefills} "
+                  f"quarantined={rep.quarantined} retries={retries} "
+                  f"shed={rep.shed} failed={rep.failed_requests}")
         occ = rep.occupancy()       # None when no decode step ran (gen=1)
         pu = rep.page_utilization()
         print(f"arch={cfg.name} backend={a.backend} requests={a.requests} "

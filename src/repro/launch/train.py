@@ -65,6 +65,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write a Chrome-trace-event JSON (Perfetto-"
                          "loadable) of the run, with the metrics snapshot "
                          "embedded; inspect with python -m repro.obs.summary")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="wsp mode: inject the seeded random fault scenario "
+                         "FaultPlan.sample_train(SEED) — a worker crash, a "
+                         "link outage on a push path, a slowdown onset and a "
+                         "PS stall — with eviction + rejoin recovery "
+                         "enabled; prints the run's fault digest")
     return ap
 
 
@@ -115,6 +121,16 @@ def main(argv=None):
                   "push latency", file=sys.stderr)
         speeds = ([float(s) for s in a.speeds.split(",")]
                   if a.speeds else None)
+        fault_kwargs = {}
+        if a.chaos is not None:
+            from repro.api import FaultPlan, FaultPolicy
+            faults = FaultPlan.sample_train(a.chaos, num_vw=a.num_vw,
+                                            max_waves=a.waves)
+            fault_kwargs = dict(
+                faults=faults,
+                fault_policy=FaultPolicy(evict_lag=1, rejoin_after_waves=1,
+                                         allow_degraded=True))
+            print(f"chaos: {faults.describe()}")
         plan = Plan(
             arch=cfg,
             cluster=ClusterSpec(num_vw=a.num_vw, topology=a.topology,
@@ -124,9 +140,12 @@ def main(argv=None):
                         optimizer=a.optimizer, lr=a.lr,
                         compression_ratio=a.compression, codec=a.codec,
                         ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
-                        resume=a.resume))
+                        resume=a.resume),
+            **fault_kwargs)
         eng = Engine(plan, tracer=tracer)
         rep = eng.fit()
+        if a.chaos is not None:
+            print(f"faults: {rep.fault_digest()}")
         if a.trace:
             print(f"trace: {tracer.export(a.trace)}")
         xs, ys = rep.loss_curve()
@@ -144,6 +163,9 @@ def main(argv=None):
         return
 
     # spmd mode
+    if a.chaos is not None:
+        raise SystemExit("--chaos needs the threaded WSP runtime; "
+                         "use --mode wsp")
     if a.topology or a.codec or a.compression:
         print("warning: --topology/--codec/--compression only apply to "
               "--mode wsp; ignored in spmd mode", file=sys.stderr)

@@ -4,9 +4,11 @@
 
 Prints per-track busy time, the WSP staleness histogram (audited against
 the recorded D bound when present), the pipeline bubble summary, per-link
-traffic/utilization and serve TTFT — everything the ROADMAP's measurement
-items report through. Exits non-zero on a malformed trace or a staleness
-audit failure.
+traffic/utilization, the fault/recovery counters (repro.faults: drops,
+retries, crashes, evictions vs rejoins) and serve TTFT — everything the
+ROADMAP's measurement items report through. Exits non-zero on a malformed
+trace or a staleness audit failure — chaos runs included: an injected
+fault whose recovery broke the D bound fails the audit here.
 """
 from __future__ import annotations
 
@@ -88,6 +90,19 @@ def summarize(doc: dict) -> list[str]:
         util = min(1.0, s / wall)
         lines.append(f"link {ln:<18s} bytes={b / 1e6:8.2f}MB "
                      f"modeled={_fmt_s(s):>9s} util={util:5.1%}")
+
+    faults = {k.split("/", 1)[1]: v for k, v in sorted(counters.items())
+              if k.startswith("fault/")}
+    if faults:
+        lines.append("faults: " + " ".join(f"{k}={v:g}"
+                                           for k, v in faults.items()))
+        recovered = (faults.get("rejoins", 0) >= faults.get("evictions", 0)
+                     and not faults.get("gate_timeouts", 0))
+        lines.append(f"  recovery: "
+                     f"{'complete' if recovered else 'partial/degraded'} "
+                     f"(evictions={faults.get('evictions', 0):g} "
+                     f"rejoins={faults.get('rejoins', 0):g} "
+                     f"gate_timeouts={faults.get('gate_timeouts', 0):g})")
 
     ttft = hists.get("serve/ttft_s")
     if ttft:

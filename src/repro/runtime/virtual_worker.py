@@ -38,6 +38,7 @@ class VWMetrics:
     waves: int = 0
     overlap_seconds: float = 0.0    # in-flight push time hidden under compute
     push_wait_seconds: float = 0.0  # time blocked on an in-flight push
+    gate_timeouts: int = 0          # staleness gates that timed out
 
 
 class _PushHandle:
@@ -93,7 +94,10 @@ class VirtualWorker(threading.Thread):
                  stop_event: Optional[threading.Event] = None,
                  fail_at_wave: Optional[int] = None,
                  async_push: bool = False,
-                 tracer=None, D: Optional[int] = None, tick_plan=None):
+                 tracer=None, D: Optional[int] = None, tick_plan=None,
+                 injector=None, vw_index: Optional[int] = None,
+                 crash_at: Optional[int] = None,
+                 gate_timeout_s: float = 120.0):
         super().__init__(daemon=True, name=wid)
         self.wid, self.ps, self.wave_step = wid, ps, wave_step
         self.loader, self.opt_state = loader, opt_state
@@ -102,6 +106,14 @@ class VirtualWorker(threading.Thread):
         self.stop_event = stop_event or threading.Event()
         self.fail_at_wave = fail_at_wave
         self.async_push = async_push
+        # fault seam: crash_at kills the thread WITHOUT deregistering (an
+        # injected WorkerCrash — the supervisor must notice and evict);
+        # fail_at_wave stays the legacy *graceful* failure that says
+        # goodbye. injector + vw_index drive slowdown-onset consults.
+        self.injector = injector
+        self.vw_index = vw_index
+        self.crash_at = crash_at
+        self.gate_timeout_s = gate_timeout_s
         # observability: D is the Plan's staleness bound (audited per wave),
         # tick_plan the (schedule, ticks) modeled pipeline rendered under
         # each wave span (core.wave.tick_schedule output)
@@ -110,9 +122,18 @@ class VirtualWorker(threading.Thread):
         self.tick_plan = tick_plan
         self.metrics = VWMetrics()
         self.failed = False
+        self.done = False               # completed its waves normally
+        self.crashed = False            # died without deregistering
+        self.evicted = False            # supervisor pulled us from the clock
+        self.error = None               # the FaultError that took us down
         self.params = None
         self._outbox: Optional[_Outbox] = None
         self._inflight: Optional[_PushHandle] = None
+
+    def evict(self):
+        """Called by the FleetSupervisor (before it deregisters us): the
+        worker exits cleanly at its next gate instead of training on."""
+        self.evicted = True
 
     def _await_inflight(self, timeout: float = 120.0, compute_span=None):
         """Block until the in-flight push (if any) has landed. `compute_span`
@@ -152,13 +173,24 @@ class VirtualWorker(threading.Thread):
                     self._await_inflight()
                     self.ps.deregister(self.wid)      # simulated node failure
                     return
+                if self.crash_at is not None and wave == self.crash_at:
+                    # injected WorkerCrash: the node vanishes — no goodbye,
+                    # no deregister, and any in-flight push is left to land
+                    # (or not) on its own. Detection is the supervisor's job.
+                    self.failed = self.crashed = True
+                    tr.instant(self.wid, "crash", wave=wave)
+                    tr.metrics.counter_inc("fault/crashes")
+                    return
                 # gate at the logical clock: `wave` counts enqueued pushes,
                 # so the staleness predicate matches the blocking runtime
                 # even while a push is still in flight
                 tg = tr.now()
-                if not self.ps.wait_pull_allowed(self.wid, timeout=120.0,
-                                                 at_clock=wave):
-                    break
+                if not self.ps.gate(self.wid, timeout=self.gate_timeout_s,
+                                    at_clock=wave):
+                    # deregistered while waiting: the supervisor evicted us
+                    self.evicted = True
+                    tr.instant(self.wid, "evicted_exit", wave=wave)
+                    return
                 tg1 = tr.now()
                 if tg1 - tg > 1e-4:     # only waits, not instant passes
                     tr.add_span(self.wid, "gate_wait", tg, tg1, wave=wave)
@@ -185,6 +217,9 @@ class VirtualWorker(threading.Thread):
                     extra = self.slowdown
                     if self.straggle_fn is not None:
                         extra += self.straggle_fn(wave)
+                    if self.injector is not None and self.vw_index is not None:
+                        extra += self.injector.slowdown_extra(
+                            self.vw_index, wave)
                     if extra > 0:
                         time.sleep(extra)
                 if self.tick_plan is not None and tr.enabled:
@@ -220,8 +255,24 @@ class VirtualWorker(threading.Thread):
                 self.metrics.wall_clock.append(time.monotonic() - t_start)
                 self.metrics.waves = wave
             self._await_inflight()
-        except Exception:
+            self.done = True
+        except Exception as e:
+            from repro.faults.errors import FaultError, GateTimeout
             self.failed = True
+            if isinstance(e, FaultError):
+                # typed fault: record it, say goodbye, exit without killing
+                # the thread's stack trace budget — the Engine surfaces it
+                # via TrainReport counters / DegradedRunError
+                self.error = e
+                if isinstance(e, GateTimeout):
+                    self.metrics.gate_timeouts += 1
+                    tr.instant(self.wid, "gate_timeout", wave=e.wave)
+                    tr.metrics.counter_inc("fault/gate_timeouts")
+                else:
+                    tr.instant(self.wid, "fault_crash", error=repr(e))
+                    tr.metrics.counter_inc("fault/crashes")
+                self.ps.deregister(self.wid)
+                return
             raise
         finally:
             if self._outbox is not None:

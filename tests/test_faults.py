@@ -1,0 +1,473 @@
+"""repro.faults: seeded fault injection and elastic recovery.
+
+Covers the three injection seams (transport retry/backoff, PS push/gate,
+worker fleet eviction + rejoin), the Plan-level validation that anchors a
+scenario to its run, the late-push/deregister ordering regression, and the
+seeded chaos sweep the ISSUE's acceptance criteria name: bit-identical
+fault digests across runs, convergence within tolerance of the fault-free
+run, a zero-violation staleness audit, and serve-side slot-fault recovery
+with bit-identical token streams.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (BSP, ClusterSpec, DegradedRunError, Engine, FaultPlan,
+                       FaultPolicy, GateTimeout, LinkFault, PSStall,
+                       PartitionSpec, Plan, PushTimeout, RunSpec, ServeSpec,
+                       SlotFault, TransportError, WSP, WorkerCrash,
+                       WorkerSlowdown)
+from repro.api.serving import Request, Scheduler
+from repro.configs import ARCHS, reduced
+from repro.core.param_server import ParameterServer
+from repro.core.wsp import WSPClockServer
+from repro.dist.topology import make_topology
+from repro.dist.transport import NullTransport, SimulatedTransport
+from repro.faults import FaultInjector
+from repro.obs import Tracer
+
+CFG = reduced(ARCHS["qwen3-0.6b"], num_layers=2, d_model=32, d_ff=64,
+              vocab_size=256, num_heads=2, num_kv_heads=2, head_dim=16,
+              num_microbatches=2)
+
+CHAOS_SEEDS = (3, 5, 11)
+
+
+# ---------------------------------------------------------------------------
+# plan / policy validation
+# ---------------------------------------------------------------------------
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultPlan(events=(LinkFault(src="a", dst="b", kind="melt"),))
+    with pytest.raises(ValueError, match="window"):
+        LinkFault(src="a", dst="b", n_msgs=0).validate()
+    with pytest.raises(ValueError, match="probability"):
+        LinkFault(src="a", dst="b", kind="loss", p=1.5).validate()
+    with pytest.raises(ValueError, match="non-negative"):
+        WorkerCrash(vw=-1, wave=0).validate()
+    with pytest.raises(ValueError, match="non-negative"):
+        PSStall(at_push=-1).validate()
+    with pytest.raises(TypeError, match="unknown fault event"):
+        FaultPlan(events=("not-an-event",))
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="msg_timeout_s"):
+        FaultPolicy(msg_timeout_s=-0.1)
+    with pytest.raises(ValueError, match="slot_recovery"):
+        FaultPolicy(slot_recovery="pray")
+    with pytest.raises(ValueError, match="rejoin_after_waves"):
+        FaultPolicy(rejoin_after_waves=-1)
+    assert not FaultPolicy().rejoins
+    assert FaultPolicy(rejoin_after_waves=1).rejoins
+    assert FaultPolicy(rejoin_delay_s=0.1).rejoins
+    assert not FaultPolicy(rejoin_delay_s=0.1, rejoin_max=0).rejoins
+
+
+def test_plan_validates_fault_scenarios():
+    crash = FaultPlan(events=(WorkerCrash(vw=0, wave=1),))
+    # serve plans take SlotFault only; train plans reject it
+    with pytest.raises(ValueError, match="this Plan serves"):
+        Plan(arch=CFG, serve=ServeSpec(prompt_len=8, gen=4, max_batch=2),
+             faults=crash)
+    with pytest.raises(ValueError, match="SlotFault is a serving fault"):
+        Plan(arch=CFG, faults=FaultPlan(events=(SlotFault(slot=0, step=1),)),
+             fault_policy=FaultPolicy(evict_lag=1))
+    with pytest.raises(ValueError, match="outside the decode batch"):
+        Plan(arch=CFG, serve=ServeSpec(prompt_len=8, gen=4, max_batch=2),
+             faults=FaultPlan(events=(SlotFault(slot=5, step=1),)))
+    # only the threaded PS runtime has injection seams
+    with pytest.raises(ValueError, match="BSP"):
+        Plan(arch=CFG, sync=BSP(), faults=crash)
+    with pytest.raises(ValueError, match="spmd"):
+        Plan(arch=CFG, run=RunSpec(backend="spmd"), faults=crash,
+             partition=PartitionSpec(stages=2, tp=1, data=1, devices=2))
+    # event indices must land inside the fleet / run
+    with pytest.raises(ValueError, match="outside the fleet"):
+        Plan(arch=CFG, cluster=ClusterSpec(num_vw=2),
+             faults=FaultPlan(events=(WorkerCrash(vw=7, wave=1),)),
+             fault_policy=FaultPolicy(evict_lag=1))
+    # a crash in a multi-worker fleet without eviction deadlocks survivors
+    with pytest.raises(ValueError, match="evict"):
+        Plan(arch=CFG, cluster=ClusterSpec(num_vw=2), faults=crash)
+
+
+# ---------------------------------------------------------------------------
+# injector: deterministic per-attempt verdicts on logical indices
+# ---------------------------------------------------------------------------
+def test_injector_outage_window_in_attempt_units():
+    plan = FaultPlan(events=(
+        LinkFault(src="a", dst="b", start_msg=1, n_msgs=2, kind="outage"),))
+    inj = FaultInjector(plan)
+    # msg 0 = attempt 0: clean, single attempt
+    assert inj.message_attempts("a", "b", 4) == [(True, 1.0)]
+    # msg 1 = attempts 1 (drop), 2 (drop), 3 (ok): retries walk out of the
+    # window because it is measured in attempt indices
+    att = inj.message_attempts("a", "b", 4)
+    assert [ok for ok, _ in att] == [False, False, True]
+    # untouched paths never consume counters
+    assert inj.message_attempts("x", "y", 4) == [(True, 1.0)]
+
+
+def test_injector_deterministic_across_instances():
+    plan = FaultPlan(seed=9, events=(
+        LinkFault(src="a", dst="b", start_msg=0, n_msgs=50, kind="loss",
+                  p=0.5),))
+    seqs = []
+    for _ in range(2):
+        inj = FaultInjector(plan)
+        seqs.append([inj.message_attempts("a", "b", 6) for _ in range(12)])
+    assert seqs[0] == seqs[1]
+    # a different seed must reshuffle the loss draws
+    inj = FaultInjector(FaultPlan(seed=10, events=plan.events))
+    assert [inj.message_attempts("a", "b", 6) for _ in range(12)] != seqs[0]
+
+
+def test_injector_worker_and_ps_seams():
+    plan = FaultPlan(events=(
+        WorkerCrash(vw=1, wave=3), WorkerCrash(vw=1, wave=5),
+        WorkerSlowdown(vw=2, wave=2, extra_s=0.4),
+        PSStall(at_push=4, seconds=0.5),
+        SlotFault(slot=1, step=2), SlotFault(slot=0, step=2),
+    ))
+    inj = FaultInjector(plan, time_scale=0.1)
+    assert inj.crash_wave(1) == 3          # earliest crash wins
+    assert inj.crash_wave(0) is None
+    assert inj.slowdown_extra(2, 1) == 0.0
+    assert inj.slowdown_extra(2, 2) == pytest.approx(0.04)   # scaled
+    assert inj.slowdown_extra(0, 9) == 0.0
+    assert inj.ps_stall_sleep(4) == pytest.approx(0.05)      # scaled
+    assert inj.ps_stall_sleep(3) == 0.0
+    assert sorted(inj.slot_faults(2)) == [0, 1]
+    assert inj.slot_faults(3) == []
+    assert not inj.empty
+    assert FaultInjector(None).empty
+
+
+# ---------------------------------------------------------------------------
+# transport: retry/backoff, per-link accounting, typed exhaustion
+# ---------------------------------------------------------------------------
+def test_simulated_transport_retries_and_accounts():
+    topo = make_topology("2node", 4)
+    inj = FaultInjector(FaultPlan(events=(
+        LinkFault(src="vw2", dst="ps", start_msg=0, n_msgs=2),)))
+    tr = SimulatedTransport(topo, time_scale=0.0, injector=inj,
+                            policy=FaultPolicy(max_retries=3))
+    # first message: attempts 0, 1 drop (the outage window), 2 succeeds
+    sec = tr.send("vw2", "ps", 1000)
+    s = tr.stats()
+    assert s["drops_by_link"]["eth10"] == 2
+    assert s["retries_by_link"]["eth10"] == 2
+    assert s["drops"] == 2 and s["retries"] == 2
+    # failed attempts are charged timeout + capped backoff on the link
+    assert s["seconds_by_link"]["eth10"] > 0
+    assert sec > 0
+    # subsequent messages are clean and charged only the link cost
+    before = s["seconds_by_link"]["eth10"]
+    tr.send("vw2", "ps", 1000)
+    s2 = tr.stats()
+    assert s2["drops"] == 2                       # unchanged
+    assert s2["seconds_by_link"]["eth10"] > before
+
+
+def test_simulated_transport_exhaustion_raises_typed():
+    topo = make_topology("2node", 4)
+    inj = FaultInjector(FaultPlan(events=(
+        LinkFault(src="vw2", dst="ps", start_msg=0, n_msgs=100),)))
+    tr = SimulatedTransport(topo, time_scale=0.0, injector=inj,
+                            policy=FaultPolicy(max_retries=2))
+    h = tr.send_async("vw2", "ps", 500)
+    with pytest.raises(TransportError, match="vw2->ps"):
+        h.wait()
+    # every waiter sees the same terminal error
+    with pytest.raises(TransportError):
+        h.wait()
+    assert tr.stats()["drops_by_link"]["eth10"] == 3    # 1 + max_retries
+
+
+def test_null_transport_fault_path():
+    inj = FaultInjector(FaultPlan(events=(
+        LinkFault(src="a", dst="b", start_msg=0, n_msgs=1),)))
+    tr = NullTransport(injector=inj)
+    tr.send("a", "b", 10)               # one retry, then lands
+    assert tr.stats()["drops_by_link"]["loopback"] == 1
+    tr2 = NullTransport(
+        injector=FaultInjector(FaultPlan(events=(
+            LinkFault(src="a", dst="b", start_msg=0, n_msgs=9),))),
+        policy=FaultPolicy(max_retries=0))
+    with pytest.raises(TransportError):
+        tr2.send("a", "b", 10)
+
+
+# ---------------------------------------------------------------------------
+# WSP clock + PS: typed gate, late-push/deregister ordering (satellite 2)
+# ---------------------------------------------------------------------------
+def _tiny_ps(**kw):
+    params = {"w": np.zeros(8, np.float32)}
+    return ParameterServer(params, num_shards=2, **kw)
+
+
+def test_clock_wait_reason_disambiguates():
+    clk = WSPClockServer(D=0)
+    clk.register("a")
+    clk.register("b")
+    clk.complete_wave("a")
+    # a at 1, b at 0, D=0: a must wait -> timeout
+    assert clk.wait_reason("a", timeout=0.05) == "timeout"
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("r", clk.wait_reason("a", timeout=5.0)))
+    t.start()
+    time.sleep(0.05)
+    clk.deregister("a")
+    t.join(5.0)
+    assert out["r"] == "evicted"
+    # advancing past a departed worker works; if_registered refuses
+    assert clk.complete_wave_if_registered("a") is None
+    assert clk.complete_wave_if_registered("b") == 1
+
+
+def test_ps_gate_raises_gate_timeout():
+    ps = _tiny_ps(D=0)
+    ps.register("a")
+    ps.register("b")
+    ps.push_wave("a", {"w": np.ones(8, np.float32)})
+    with pytest.raises(GateTimeout, match="staleness gate"):
+        ps.gate("a", timeout=0.05)
+    assert ps.gate("b", timeout=0.05) is True
+
+
+def test_ps_gate_returns_false_for_evicted():
+    ps = _tiny_ps(D=0)
+    ps.register("a")
+    ps.register("b")
+    ps.push_wave("a", {"w": np.ones(8, np.float32)})
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("r", ps.gate("a", timeout=5.0)))
+    t.start()
+    time.sleep(0.05)
+    ps.deregister("a")
+    t.join(5.0)
+    assert out["r"] is False
+
+
+def test_late_push_after_deregister_never_advances_clock():
+    """Satellite 2: a crashed worker's in-flight push must apply its delta
+    (stale-but-sound) but never advance the global clock past what the
+    survivors gated against."""
+    ps = _tiny_ps(D=4)
+    ps.register("a")
+    ps.register("b")
+    pending = ps.begin_push("a", {"w": np.ones(8, np.float32)})
+    ps.deregister("a")                  # crash lands between wire and apply
+    clock = ps.finish_push(pending)     # must not raise, must not advance
+    assert clock == -1
+    assert ps.late_pushes == 1
+    assert ps.clock.global_clock() == 0          # b still at 0
+    assert "a" not in ps.clock.state.clocks
+    got = np.asarray(jax.tree.leaves(ps.pull())[0])
+    assert np.allclose(got, 1.0)                 # the delta itself landed
+
+
+def test_push_timeout_is_typed():
+    inj = FaultInjector(FaultPlan(events=(
+        LinkFault(src="a", dst="ps", start_msg=0, n_msgs=50),)))
+    ps = _tiny_ps(D=2, transport=NullTransport(
+        injector=inj, policy=FaultPolicy(max_retries=1)))
+    ps.register("a")
+    with pytest.raises(PushTimeout, match="did not land"):
+        ps.push_wave("a", {"w": np.ones(8, np.float32)})
+    assert ps.push_count == 0 and ps.clock.state.clocks["a"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: loud degraded completion (satellite 1)
+# ---------------------------------------------------------------------------
+def _chaos_plan(seed=None, events=None, *, num_vw=3, waves=6, topology=None,
+                **pol):
+    faults = FaultPlan(seed=seed or 0, events=events or ())
+    defaults = dict(evict_lag=1, rejoin_after_waves=1, stall_grace_s=5.0)
+    defaults.update(pol)
+    return Plan(arch=CFG,
+                cluster=ClusterSpec(num_vw=num_vw, topology=topology,
+                                    time_scale=0.001),
+                sync=WSP(D=1),
+                run=RunSpec(max_waves=waves, batch=4, seq=16),
+                faults=faults, fault_policy=FaultPolicy(**defaults))
+
+
+def test_unrecovered_transport_death_fails_loudly():
+    events = (LinkFault(src="vw1", dst="ps", start_msg=0, n_msgs=10_000),)
+    plan = _chaos_plan(events=events, num_vw=2, waves=3,
+                       rejoin_after_waves=None, max_retries=1)
+    with pytest.raises(DegradedRunError) as ei:
+        Engine(plan).fit()
+    rep = ei.value.report
+    assert rep is not None and rep.crashes >= 1
+    assert rep.drops >= 2
+    # opting into degraded completion returns the same report instead
+    plan2 = _chaos_plan(events=events, num_vw=2, waves=3,
+                        rejoin_after_waves=None, max_retries=1,
+                        allow_degraded=True)
+    rep2 = Engine(plan2).fit()
+    assert rep2.crashes >= 1
+    assert rep2.fault_digest() == rep.fault_digest()
+    assert rep2.waves_requested == 6
+    assert rep2.waves < rep2.waves_requested     # visibly truncated
+
+
+# ---------------------------------------------------------------------------
+# chaos sweep: determinism, convergence, staleness audit (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fault_free_report():
+    plan = Plan(arch=CFG,
+                cluster=ClusterSpec(num_vw=3, time_scale=0.001),
+                sync=WSP(D=1),
+                run=RunSpec(max_waves=6, batch=4, seq=16))
+    return Engine(plan).fit()
+
+
+def _sampled_chaos_plan(seed):
+    faults = FaultPlan.sample_train(seed, num_vw=3, max_waves=6)
+    return Plan(arch=CFG,
+                cluster=ClusterSpec(num_vw=3, time_scale=0.001),
+                sync=WSP(D=1),
+                run=RunSpec(max_waves=6, batch=4, seq=16),
+                faults=faults,
+                fault_policy=FaultPolicy(evict_lag=1, rejoin_after_waves=1,
+                                         stall_grace_s=5.0))
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_deterministic_and_convergent(seed, fault_free_report):
+    eng = Engine(_sampled_chaos_plan(seed), tracer=Tracer(enabled=True))
+    rep = eng.fit()
+    rep2 = Engine(_sampled_chaos_plan(seed)).fit()
+    # (a) the fault digest is bit-identical across runs of the same seed
+    assert rep.fault_digest() == rep2.fault_digest()
+    # the sampled scenario always crashes one worker: it must have been
+    # evicted as 'dead' (no goodbye) and its successor must finish waves
+    assert rep.crashes >= 1
+    assert any(r == "dead" for _, r in rep.fault_digest()["evictions"])
+    assert rep.rejoins
+    rejoined = rep.rejoins[0]
+    assert eng.workers[rejoined].done
+    assert eng.workers[rejoined].metrics.waves > 0
+    # (b) final loss within tolerance of the fault-free run
+    tail = lambda r: np.mean([l for _, _, l in r.losses][-3:])
+    assert abs(tail(rep) - tail(fault_free_report)) \
+        / abs(tail(fault_free_report)) < 0.2
+    # (c) recovery respected D: the traced run audits zero violations, and
+    # the rejoined worker was gated from its very first wave
+    tel = rep.telemetry
+    assert tel.counters.get("wsp/staleness_violations", 0) == 0
+    assert tel.staleness_max() is not None and tel.staleness_max() <= 1
+
+
+def test_rejoin_traffic_lands_on_failed_nodes_links():
+    """Satellite 3: the successor worker is aliased onto the failed
+    worker's topology endpoint, so its PS traffic is billed to the failed
+    node's links."""
+    events = (WorkerCrash(vw=2, wave=1),)
+    plan = _chaos_plan(events=events, topology="2node")
+    eng = Engine(plan)
+    rep = eng.fit()
+    assert rep.rejoins == ["vw2r"]
+    topo = eng.topology
+    assert topo.link("vw2r", "ps").name == topo.link("vw2", "ps").name
+    # the rejoiner pushed real bytes, and they were accounted on a known
+    # link (resolving through the alias, not dropped on the floor)
+    assert eng.workers["vw2r"].metrics.waves > 0
+    assert sum(rep.comm.get("bytes_by_link", {}).values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# serving: slot faults, quarantine, requeue/reprefill, shedding
+# ---------------------------------------------------------------------------
+def _serve_plan(events=(), *, max_batch=2, gen=6, prompt_len=8, **pol):
+    kw = {}
+    if events:
+        kw = dict(faults=FaultPlan(events=tuple(events)),
+                  fault_policy=FaultPolicy(**pol))
+    return Plan(arch=CFG,
+                serve=ServeSpec(prompt_len=prompt_len, gen=gen,
+                                max_batch=max_batch),
+                **kw)
+
+
+def _requests(n, prompt_len=8, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size, prompt_len,
+                                        dtype=np.int32))
+            for i in range(n)]
+
+
+def test_slot_fault_requeue_streams_bit_identical():
+    """Acceptance (d): under a slot fault every admitted request still
+    emits its fault-free token stream, bit for bit."""
+    baseline = Scheduler(Engine(_serve_plan())).run(_requests(4))
+    rep = Scheduler(Engine(_serve_plan(
+        events=[SlotFault(slot=0, step=2)]))).run(_requests(4))
+    assert rep.slot_faults == 1
+    assert rep.requeues == 1
+    assert rep.quarantined == 1
+    assert rep.failed_requests == 0
+    want = {r.rid: r.tokens for r in baseline.requests}
+    for r in rep.requests:
+        assert r.tokens == want[r.rid], f"rid {r.rid} diverged"
+    faulted = [r for r in rep.requests if r.retries]
+    assert len(faulted) == 1 and faulted[0].retries == 1
+    # two runs of the same faulted plan are bit-identical too
+    rep2 = Scheduler(Engine(_serve_plan(
+        events=[SlotFault(slot=0, step=2)]))).run(_requests(4))
+    assert [r.tokens for r in rep2.requests] == \
+        [r.tokens for r in rep.requests]
+
+
+def test_slot_fault_reprefill_keeps_tokens():
+    baseline = Scheduler(Engine(_serve_plan())).run(_requests(2,
+                                                             prompt_len=4))
+    rep = Scheduler(Engine(_serve_plan(
+        events=[SlotFault(slot=0, step=2)],
+        slot_recovery="reprefill", quarantine_slots=False))).run(
+        _requests(2, prompt_len=4))
+    assert rep.slot_faults == 1
+    assert rep.reprefills == 1 and rep.requeues == 0
+    want = {r.rid: r.tokens for r in baseline.requests}
+    for r in rep.requests:
+        assert r.tokens == want[r.rid]
+
+
+def test_slot_retry_budget_exhaustion_fails_request():
+    rep = Scheduler(Engine(_serve_plan(
+        events=[SlotFault(slot=0, step=1), SlotFault(slot=0, step=3)],
+        max_batch=1, quarantine_slots=False,
+        slot_retry_budget=1))).run(_requests(2))
+    assert rep.slot_faults == 2
+    assert rep.failed_requests == 1
+    failed = [r for r in rep.requests if r.failed]
+    assert len(failed) == 1 and failed[0].retries == 2
+    # the survivor still completed its full budget
+    done = [r for r in rep.requests if not r.failed and not r.shed]
+    assert done and all(r.new_tokens == 6 for r in done)
+
+
+def test_shed_after_faults_refuses_queue():
+    rep = Scheduler(Engine(_serve_plan(
+        events=[SlotFault(slot=0, step=1)],
+        shed_after_faults=1))).run(_requests(6))
+    assert rep.slot_faults == 1
+    assert rep.shed >= 1
+    shed = [r for r in rep.requests if r.shed]
+    assert len(shed) == rep.shed
+    assert all(not r.tokens for r in shed)
+    # every request is accounted exactly once
+    assert sorted(r.rid for r in rep.requests) == list(range(6))
