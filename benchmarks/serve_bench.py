@@ -12,6 +12,10 @@ point, the file is a trajectory anchor per the ROADMAP):
     size, peak pages, mean utilization), for the contiguous-degenerate
     layout the timing runs use and for a paged pool (page_size =
     prompt_len // 2) driven by mixed per-request budgets
+  - shared_prefix: identical prompts under a pool squeezed below what
+    unshared admission needs — prefix sharing (repro.serve.memory) must
+    admit the batch without blocking, peak strictly fewer distinct
+    pages, and emit bit-identical streams (CI asserts all three)
 
   PYTHONPATH=src python benchmarks/serve_bench.py           # full sweep
   PYTHONPATH=src python benchmarks/serve_bench.py --tiny    # CI smoke
@@ -90,6 +94,46 @@ def bench_arch(name: str, *, prompt_len: int, gen: int, max_batch: int,
              for r in reqs]
     p_out = Scheduler(paged).run(mixed)
 
+    # shared-prefix workload: every request carries the same full prompt
+    # and the pool is squeezed one page below what unshared admission
+    # needs at full batch — prefix sharing must admit without blocking
+    # and peak strictly below the unshared run, with identical streams.
+    # page_size is chosen so the prompt ends inside a page (CoW tail).
+    from repro.serve.cache import make_layout
+    ps_s = max(2, prompt_len // 2 - 1)
+    gen_s = max(2, gen // 4)
+    lo = make_layout(max_batch, prompt_len + gen, page_size=ps_s)
+    per_req = lo.pages_for(prompt_len + gen_s)
+    budget = max(lo.pages_per_slot, per_req * max_batch - 1)
+    common = rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+    mk_shared = lambda: [Request(rid=i, prompt=common.copy(),
+                                 max_new_tokens=gen_s)
+                         for i in range(n_req)]
+    sv_kw = dict(prompt_len=prompt_len, gen=gen, max_batch=max_batch,
+                 page_size=ps_s, max_pages=budget)
+    u_out = Scheduler(Engine(plan.replace(
+        serve=ServeSpec(**sv_kw)))).run(mk_shared())
+    s_out = Scheduler(Engine(plan.replace(
+        serve=ServeSpec(share_prefix=True, evict=True,
+                        **sv_kw)))).run(mk_shared())
+    assert [r.tokens for r in s_out.requests] == \
+        [r.tokens for r in u_out.requests], "sharing changed a stream"
+    if s_out.pages_total:
+        assert s_out.prefix_hit_tokens > 0
+        assert s_out.peak_pages < u_out.peak_pages, \
+            (s_out.peak_pages, u_out.peak_pages)
+        assert u_out.admit_blocked > 0 and s_out.admit_blocked == 0
+    shared_cell = {
+        "tokens": s_out.tokens_out,
+        "unshared": page_cols(u_out),
+        "shared": page_cols(s_out),
+        "prefix_hit_tokens": s_out.prefix_hit_tokens,
+        "pages_shared": s_out.pages_shared,
+        "cow_copies": s_out.cow_copies,
+        "evictions": s_out.evictions,
+        "preemptions": s_out.preemptions,
+    }
+
     # one *untimed* traced pass: the telemetry block (TTFT distribution,
     # admission-group accounting) never has tracing on during the timed
     # batched/sequential cells the CI speedup floor reads
@@ -126,6 +170,7 @@ def bench_arch(name: str, *, prompt_len: int, gen: int, max_batch: int,
         "batched_vs_sequential_speedup": s_s / b_s,
         "paged_mixed_budgets": {"tokens": p_out.tokens_out,
                                 "pages": page_cols(p_out)},
+        "shared_prefix": shared_cell,
         "telemetry": telemetry,
     }
 
@@ -159,6 +204,12 @@ def main(argv=None):
               f"batched={cell['batched']['tokens_per_s']:.1f}tok/s "
               f"sequential={cell['sequential']['tokens_per_s']:.1f}tok/s "
               f"speedup={cell['batched_vs_sequential_speedup']:.2f}x")
+        sh = cell["shared_prefix"]
+        print(f"  shared_prefix: peak {sh['unshared']['peak_pages']} -> "
+              f"{sh['shared']['peak_pages']} pages, "
+              f"hit={sh['prefix_hit_tokens']} tok "
+              f"blocked {sh['unshared']['admit_blocked']} -> "
+              f"{sh['shared']['admit_blocked']}")
     with open(a.out, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {a.out}")

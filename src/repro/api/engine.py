@@ -527,7 +527,7 @@ class Engine:
                 jax.block_until_ready(logits)
         return logits[:, -1], cache
 
-    def prefill_into(self, store, prompts, lens, slots):
+    def prefill_into(self, store, prompts, lens, slots, skip_pages=None):
         """Prefill a batch of (possibly variable-length, right-padded)
         prompts directly into `store`'s page pool.
 
@@ -537,7 +537,16 @@ class Engine:
         through the block table in place; freshly computed per-slot state
         (ring buffers, SSM/RWKV state) is adopted into the assigned slots.
         Returns each live row's last-real-position logits [max_batch,
-        vocab]."""
+        vocab].
+
+        skip_pages[j] (optional, per live row) skips *writing* row j's
+        first N KV pages: they hold a shared prefix the memory manager
+        mapped from the index, already filled with bit-identical K/V.
+        The row's compute still spans the whole prompt — per-slot state
+        (rings, SSM/RWKV recurrences) is not paged and must be rebuilt
+        from position 0 — so prefilling "only the suffix" means only the
+        suffix's pages are written; the matched pages' recomputed K/V
+        routes to the trash page."""
         import jax.numpy as jnp
         from repro.serve.cache import CacheStore
         self._require_serve("prefill_into")
@@ -555,7 +564,8 @@ class Engine:
         lens = jnp.asarray(lens, jnp.int32)
         with self.tracer.span("engine", "prefill", rows=len(slots)):
             logits, out = pg["prefill"](st["params"], prompts, lens,
-                                        store.prefill_input(slots))
+                                        store.prefill_input(
+                                            slots, skip_pages=skip_pages))
             if self.tracer.enabled:
                 jax.block_until_ready(logits)
         store.append_rows(out, [(j, s) for j, s in enumerate(slots)])

@@ -108,7 +108,18 @@ class ServeSpec:
     `max_pages` physical pages (0 -> the worst case max_batch *
     ceil(max_len / page_size)); each request allocates only the pages its
     own prompt + budget needs, and admission is refused while the pool is
-    exhausted."""
+    exhausted.
+
+    The `repro.serve.memory` policy layer rides three knobs:
+    `share_prefix` maps a request's longest indexed prompt prefix onto
+    existing refcounted pages (copy-on-write on divergence) instead of
+    refilling them; `evict` lets admission reclaim cold indexed pages
+    LRU-first under pool pressure (readmitted prefixes recompute their
+    prefill); `preempt` kicks an in-flight request — fewest generated
+    tokens, or most slack under the scheduler's "deadline" policy — and
+    replays it instead of refusing admission. All three are bit-identity
+    preserving (token streams never change, only page accounting) and
+    inert for families without a full-attention KV pool."""
 
     prompt_len: int = 24
     gen: int = 16
@@ -118,6 +129,9 @@ class ServeSpec:
     cache_dtype: str = ""           # "" -> run.compute_dtype; "f8" -> fp8 KV
     page_size: int = 0              # KV page tokens; 0 -> max_len (1 pg/slot)
     max_pages: int = 0              # pool size; 0 -> worst-case B * pages/slot
+    share_prefix: bool = False      # refcounted prefix sharing + CoW
+    evict: bool = False             # LRU-evict cold indexed pages
+    preempt: bool = False           # preempt + replay instead of refusing
 
     @property
     def max_len(self) -> int:
@@ -392,6 +406,12 @@ class Plan:
         from repro.serve.cache import make_layout
         make_layout(sv.max_batch, sv.max_len, page_size=sv.page_size,
                     max_pages=sv.max_pages)     # geometry errors surface now
+        if sv.evict and not sv.share_prefix:
+            raise ValueError(
+                "evict=True without share_prefix=True is a silent no-op: "
+                "only the prefix index retains pages past their last "
+                "mapping, so there is never a cold page to evict — enable "
+                "share_prefix or drop evict")
         if self.shape is not None:
             raise ValueError("serve shapes (prefill/decode/max batch) are "
                              "frozen in Plan.serve; drop Plan.shape")

@@ -135,6 +135,20 @@ def serve_paged() -> Plan:
                                 page_size=4, max_pages=12))
 
 
+@preset("serve_shared")
+def serve_shared() -> Plan:
+    """Prefix-shared paged serving under memory pressure: identical
+    prompts map onto refcounted shared pages (repro.serve.memory), cold
+    indexed pages are reclaimed LRU-first, and in-flight requests are
+    preempted + replayed instead of refusing admission — the pool is
+    sized below what unshared admission would need."""
+    return Plan(arch=_tiny_arch(),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4,
+                                page_size=4, max_pages=10,
+                                share_prefix=True, evict=True,
+                                preempt=True))
+
+
 def main(argv=None):
     import argparse
 
@@ -158,16 +172,26 @@ def main(argv=None):
         sv = plan.serve
         if sv.page_size:
             # paged presets demo the continuous-batching Scheduler with
-            # mixed prompt lengths and budgets (the paged pool's point)
+            # mixed prompt lengths and budgets (the paged pool's point);
+            # the shared preset instead repeats one full prompt so the
+            # prefix index has something to hit
             from repro.api.serving import Request, Scheduler
             rng = np.random.default_rng(0)
-            reqs = [Request(rid=i,
-                            prompt=rng.integers(
-                                0, plan.arch.vocab_size,
-                                int(rng.integers(2, sv.prompt_len + 1)),
-                                dtype=np.int32),
-                            max_new_tokens=int(rng.integers(1, sv.gen + 1)))
-                    for i in range(2 * sv.max_batch)]
+            if sv.share_prefix:
+                common = rng.integers(0, plan.arch.vocab_size,
+                                      sv.prompt_len, dtype=np.int32)
+                reqs = [Request(rid=i, prompt=common.copy(),
+                                max_new_tokens=max(1, sv.gen // 2))
+                        for i in range(2 * sv.max_batch)]
+            else:
+                reqs = [Request(rid=i,
+                                prompt=rng.integers(
+                                    0, plan.arch.vocab_size,
+                                    int(rng.integers(2, sv.prompt_len + 1)),
+                                    dtype=np.int32),
+                                max_new_tokens=int(
+                                    rng.integers(1, sv.gen + 1)))
+                        for i in range(2 * sv.max_batch)]
             rep = Scheduler(Engine(plan)).run(reqs)
             assert rep.tokens_out == sum(r.max_new_tokens for r in reqs)
             pu = rep.page_utilization()
@@ -176,6 +200,13 @@ def main(argv=None):
                   f"(x{rep.page_size} tok) "
                   f"util={0.0 if pu is None else pu:.2f} "
                   f"throughput={rep.tokens_per_s():.1f} tok/s")
+            if sv.share_prefix:
+                assert rep.prefix_hit_tokens > 0
+                assert rep.admit_blocked == 0, rep.admit_blocked
+                print(f"memory: prefix_hit={rep.prefix_hit_tokens} tok "
+                      f"shared={rep.pages_shared} cow={rep.cow_copies} "
+                      f"evictions={rep.evictions} "
+                      f"preemptions={rep.preemptions}")
             print("OK")
             return 0
         rep = Engine(plan).generate()

@@ -185,6 +185,15 @@ class ServeReport:
     peak_pages: int = 0         # high-water mark of pages in use
     page_steps: int = 0         # sum over decode steps of pages in use
     admit_blocked: int = 0      # admission rounds refused: pool exhausted
+    # memory-manager accounting (repro.serve.memory; zeros when
+    # share_prefix/evict/preempt are off or the family has no KV pool)
+    prefix_hit_tokens: int = 0  # prompt tokens served from indexed pages
+    pages_shared: int = 0       # prefix pages mapped by refcount (no copy)
+    cow_copies: int = 0         # copy-on-write page duplications taken
+    evictions: int = 0          # cold indexed pages reclaimed (LRU)
+    readmit_recomputes: int = 0  # admissions that re-prefilled an evicted
+    #                              prefix (recompute-on-readmit)
+    preemptions: int = 0        # in-flight requests preempted + replayed
     # fault / recovery accounting (repro.faults; zeros on fault-free runs)
     slot_faults: int = 0        # injected slot faults taken
     requeues: int = 0           # requests re-admitted after a slot fault
@@ -226,8 +235,13 @@ class ServeReport:
         return float(np.mean([r.ttft_s for r in self.requests]))
 
     def page_utilization(self) -> Optional[float]:
-        """Mean fraction of the KV page pool in use across decode steps
-        (scheduler runs only; None for aligned-batch generate())."""
+        """Peak *distinct* pages in use as a fraction of the pool
+        (scheduler runs only; None for aligned-batch generate()).
+        Distinct is load-bearing under prefix sharing: a page mapped
+        into N block tables is one page of HBM — summing per-slot
+        block-table lengths would double-count exactly the pages
+        sharing saves, and the pool-sizing question this answers is the
+        peak physical footprint, not a time-averaged occupancy."""
         if not self.decode_steps or not self.pages_total:
             return None
-        return self.page_steps / (self.decode_steps * self.pages_total)
+        return self.peak_pages / self.pages_total

@@ -12,7 +12,14 @@ paged cache subsystem (repro.serve.cache):
           is *refused* while the pool is exhausted; one variable-length
           prefill call (right-padded prompts + a per-row length vector)
           scatters K/V straight into the allocated pages and adopts the
-          per-slot ring/SSM state into the assigned slots
+          per-slot ring/SSM state into the assigned slots. With
+          ServeSpec.share_prefix the repro.serve.memory manager first
+          maps the request's longest indexed prompt prefix onto existing
+          refcounted pages (copy-on-write on a fully-matched partial
+          page) and prefill skips writing them; with evict, cold indexed
+          pages are reclaimed LRU-first under pressure; with preempt, an
+          in-flight victim (fewest tokens generated, or most deadline
+          slack) is requeued and replayed instead of refusing admission
   decode  one jitted decode call advances every active slot by one token;
           slots sit at different depths, carried by the per-row position
           vector (core.wave pos_per_row / forward_ref vector pos), and
@@ -46,6 +53,7 @@ import numpy as np
 
 from repro.api.engine import Engine
 from repro.api.report import RequestStats, ServeReport
+from repro.serve.memory import MemoryManager
 
 POLICIES = ("fifo", "deadline")
 
@@ -161,12 +169,16 @@ class Scheduler:
         fpol = plan.fault_policy
         quarantined: set[int] = set()
         retries_by_rid: dict[int, int] = {}
+        mm = MemoryManager(store, share_prefix=sv.share_prefix,
+                           evict=sv.evict, preempt=sv.preempt,
+                           policy=self.policy, metrics=tr.metrics)
+        preempted_rids: set[int] = set()
 
         def retire(s: int, slot: _Slot):
             slot.stats.finished_step = step
             slot.stats.latency_s = time.monotonic() - slot.t_admit
             report.requests.append(slot.stats)
-            store.free(s)
+            mm.went_cold(store.free(s), step)
             if s not in quarantined:
                 free.append(s)
                 free.sort()
@@ -190,7 +202,7 @@ class Scheduler:
             keyed by (rid, k), so the replayed stream is bit-identical to
             the one a fault-free scheduler would have produced."""
             del active[s]
-            store.free(s)
+            mm.went_cold(store.free(s), step)
             if s not in quarantined:
                 free.append(s)
                 free.sort()
@@ -199,6 +211,24 @@ class Scheduler:
             tr.instant("sched", "requeue", rid=slot.req.rid, slot=s,
                        step=step, retries=slot.stats.retries)
             tr.metrics.counter_inc("fault/requeues")
+
+        def preempt_slot(s: int):
+            """Preempt an in-flight request under pool pressure: release
+            its pages and replay it from the prompt. Token picks are
+            keyed by (rid, k), so the replayed stream is bit-identical
+            to the uninterrupted one — preemption trades latency for
+            admission, never correctness."""
+            slot = active.pop(s)
+            mm.went_cold(store.free(s), step)
+            if s not in quarantined:
+                free.append(s)
+                free.sort()
+            preempted_rids.add(slot.req.rid)
+            report.preemptions += 1
+            tr.instant("sched", "preempt", rid=slot.req.rid, slot=s,
+                       step=step, tokens=len(slot.stats.tokens))
+            tr.metrics.counter_inc("serve/preemptions")
+            return (slot.prompt, slot.req)
 
         def fail_request(s: int, slot: _Slot):
             slot.stats.failed = True
@@ -220,14 +250,23 @@ class Scheduler:
             if seq.shape[0] > P:
                 return False
             del active[s]
-            store.free(s)
+            mm.went_cold(store.free(s), step)
             if s in quarantined:
                 if not free:
                     return False        # no healthy slot left to rebuild on
                 s2 = free.pop(0)
             else:
                 s2 = s
-            store.alloc(s2, slot.stats.prompt_len + slot.limit)
+            need = slot.stats.prompt_len + slot.limit
+            if not mm.make_room(store.layout.pages_for(need)
+                                if store._has_pool else 0):
+                # the slot's own prompt pages went cold under an index
+                # hold and eviction can't reclaim enough — replay instead
+                if s2 != s or s not in quarantined:
+                    free.append(s2)
+                    free.sort()
+                return False
+            store.alloc(s2, need)
             prompts = np.zeros((B, P), np.int32)
             prompts[0, :seq.shape[0]] = seq
             lens = np.ones(B, np.int32)
@@ -289,35 +328,52 @@ class Scheduler:
                 admits = []
                 order = self._admit_order([r for _, r in queue], step)
                 taken = []
+                requeued = []
                 for qi in order:
                     if not free:
                         break
                     prompt, r = queue[qi]
                     need = prompt.shape[0] + self._limit(r)
-                    if not store.can_alloc(need):
-                        # pool exhausted: stop admitting rather than
-                        # over-reserving; retirements will free pages
-                        report.admit_blocked += 1
-                        tr.instant("sched", "refuse", rid=r.rid, step=step,
-                                   need_tokens=need,
-                                   pages_in_use=store.pages_in_use)
-                        break
+                    hit, pages, need_fresh = mm.plan_admit(prompt, need)
+                    if not mm.make_room(need_fresh, protect=pages):
+                        # pool exhausted: before refusing, try to preempt
+                        # an in-flight victim (never one that was already
+                        # preempted — bounds preemptions at one per rid)
+                        vict = (mm.victim(active, step, need_fresh)
+                                if r.rid not in preempted_rids else None)
+                        if vict is not None:
+                            requeued.append(preempt_slot(vict))
+                        if vict is None \
+                                or not mm.make_room(need_fresh,
+                                                    protect=pages):
+                            # stop admitting rather than over-reserving;
+                            # retirements will free pages
+                            report.admit_blocked += 1
+                            tr.instant("sched", "refuse", rid=r.rid,
+                                       step=step, need_tokens=need,
+                                       pages_in_use=store.pages_in_use)
+                            break
                     s = free.pop(0)
-                    store.alloc(s, need)
+                    skip = mm.admit(s, prompt, need, hit, pages, step)
                     taken.append(qi)
-                    admits.append((r, prompt, s))
+                    admits.append((r, prompt, s, skip))
                 for qi in sorted(taken, reverse=True):
                     del queue[qi]
+                # preempted victims re-enter at the queue front (inserted
+                # only after the del loop — `taken` indexes the old queue)
+                for item in reversed(requeued):
+                    queue.insert(0, item)
                 if admits:
                     group = report.prefill_calls
-                    for r, prompt, s in admits:
+                    for r, prompt, s, skip in admits:
                         tr.instant("sched", "admit", rid=r.rid, slot=s,
                                    step=step, group=group,
                                    prompt_len=prompt.shape[0],
+                                   shared_pages=skip,
                                    pages_in_use=store.pages_in_use)
                     prompts = np.zeros((B, P), np.int32)
                     lens = np.ones(B, np.int32)
-                    for j, (r, prompt, _) in enumerate(admits):
+                    for j, (r, prompt, _, _) in enumerate(admits):
                         prompts[j, :prompt.shape[0]] = prompt
                         lens[j] = prompt.shape[0]
                     t0 = time.monotonic()
@@ -325,7 +381,8 @@ class Scheduler:
                                  rows=len(admits)):
                         logits = np.asarray(eng.prefill_into(
                             store, prompts, lens,
-                            [s for _, _, s in admits]))
+                            [s for _, _, s, _ in admits],
+                            skip_pages=[skip for *_, skip in admits]))
                     dt = time.monotonic() - t0
                     report.prefill_s += dt
                     report.prefill_calls += 1
@@ -333,7 +390,7 @@ class Scheduler:
                     # together) to the end of this admission group's
                     # prefill; the group's cost enters each member once
                     ttft = time.monotonic() - t_start
-                    for j, (r, prompt, s) in enumerate(admits):
+                    for j, (r, prompt, s, _) in enumerate(admits):
                         tok = self._pick_one(logits[j], r.rid, 0, key)
                         stats = RequestStats(rid=r.rid,
                                              prompt_len=prompt.shape[0],
@@ -392,6 +449,14 @@ class Scheduler:
                 callback(step, len(active))
         report.wall_s = time.monotonic() - t_start
         report.peak_pages = store.peak_pages
+        report.prefix_hit_tokens = mm.prefix_hit_tokens
+        report.pages_shared = mm.pages_shared
+        report.cow_copies = store.cow_copies
+        report.evictions = mm.evictions
+        report.readmit_recomputes = mm.readmit_recomputes
+        if mm.share_prefix and mm.prompt_tokens:
+            tr.metrics.gauge_set("serve/prefix_hit_rate",
+                                 mm.prefix_hit_tokens / mm.prompt_tokens)
         report.requests.sort(key=lambda r: r.rid)
         return eng.attach_telemetry(report)
 

@@ -48,6 +48,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-pages", type=int, default=0,
                     help="KV page pool size (ServeSpec.max_pages; 0 = "
                          "worst case batch * pages-per-slot)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="map each request's longest indexed prompt prefix "
+                         "onto refcounted shared pages (ServeSpec."
+                         "share_prefix); the synthetic requests draw from "
+                         "a small prompt pool so prefixes actually repeat")
+    ap.add_argument("--evict", action="store_true",
+                    help="reclaim cold indexed pages LRU-first under pool "
+                         "pressure (ServeSpec.evict; needs --share-prefix)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="under pool pressure, preempt an in-flight "
+                         "request (fewest tokens generated, or most "
+                         "deadline slack) and replay it instead of "
+                         "refusing admission (ServeSpec.preempt)")
     ap.add_argument("--policy", choices=("fifo", "deadline"),
                     default="fifo",
                     help="scheduler admission policy (deadline orders the "
@@ -87,12 +100,13 @@ def main(argv=None):
         cfg = make_reduced(cfg)
 
     if not a.requests and (a.page_size or a.max_pages
-                           or a.policy != "fifo" or a.chaos is not None):
+                           or a.policy != "fifo" or a.chaos is not None
+                           or a.share_prefix or a.evict or a.preempt):
         raise SystemExit(
-            "--page-size/--max-pages/--policy/--chaos drive the continuous-"
-            "batching scheduler; the aligned generate() path keeps the "
-            "contiguous reference cache and would silently drop them — "
-            "add --requests N")
+            "--page-size/--max-pages/--policy/--chaos/--share-prefix/"
+            "--evict/--preempt drive the continuous-batching scheduler; "
+            "the aligned generate() path keeps the contiguous reference "
+            "cache and would silently drop them — add --requests N")
 
     partition = PartitionSpec()
     if a.backend == "spmd":
@@ -109,7 +123,9 @@ def main(argv=None):
                                 max_batch=a.batch,
                                 temperature=a.temperature,
                                 page_size=a.page_size,
-                                max_pages=a.max_pages),
+                                max_pages=a.max_pages,
+                                share_prefix=a.share_prefix,
+                                evict=a.evict, preempt=a.preempt),
                 run=RunSpec(backend=a.backend),
                 **fault_kwargs)
     from repro.obs import NULL_TRACER, Tracer
@@ -125,10 +141,17 @@ def main(argv=None):
             if a.policy != "deadline":
                 return 0
             return int(a.gen * (1 + (a.requests - i)))
-        reqs = [Request(rid=i,
-                        prompt=rng.integers(0, cfg.vocab_size, a.prompt_len,
-                                            dtype=np.int32),
-                        deadline=deadline(i))
+        if a.share_prefix:
+            # draw from a small prompt pool so prefixes actually repeat
+            # and the index has something to hit
+            pool = [rng.integers(0, cfg.vocab_size, a.prompt_len,
+                                 dtype=np.int32)
+                    for _ in range(max(1, a.requests // 4))]
+            prompt_of = lambda i: pool[i % len(pool)].copy()
+        else:
+            prompt_of = lambda i: rng.integers(0, cfg.vocab_size,
+                                               a.prompt_len, dtype=np.int32)
+        reqs = [Request(rid=i, prompt=prompt_of(i), deadline=deadline(i))
                 for i in range(a.requests)]
         rep = Scheduler(eng, policy=a.policy).run(reqs)
         if a.trace:
@@ -149,6 +172,12 @@ def main(argv=None):
               f"pages={rep.peak_pages}/{rep.pages_total}"
               f"(x{rep.page_size} tok)"
               f" util={'n/a' if pu is None else f'{pu:.2f}'}")
+        if a.share_prefix or a.evict or a.preempt:
+            print(f"memory: prefix_hit={rep.prefix_hit_tokens} tok "
+                  f"shared={rep.pages_shared} cow={rep.cow_copies} "
+                  f"evictions={rep.evictions} "
+                  f"readmits={rep.readmit_recomputes} "
+                  f"preemptions={rep.preemptions}")
         lat = sorted(r.latency_s for r in rep.requests)
         print(f"latency: p50={lat[len(lat) // 2] * 1e3:.1f}ms "
               f"max={lat[-1] * 1e3:.1f}ms "

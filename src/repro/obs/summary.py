@@ -109,6 +109,12 @@ def summarize(doc: dict) -> list[str]:
         lines.append(f"serve ttft: n={ttft['count']} "
                      f"mean={_fmt_s(ttft['sum'] / max(1, ttft['count']))} "
                      f"max={_fmt_s(ttft['max'])}")
+    hit = gauges.get("serve/prefix_hit_rate")
+    if hit is not None:
+        lines.append(f"serve memory: prefix_hit_rate={hit:.1%} "
+                     f"evictions={counters.get('serve/evictions', 0):g} "
+                     f"preemptions="
+                     f"{counters.get('serve/preemptions', 0):g}")
     wt = hists.get("train/wait_s")
     if wt:
         lines.append(f"gate waits: n={wt['count']} "

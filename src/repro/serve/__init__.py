@@ -2,13 +2,16 @@
 
 `repro.serve.cache` owns every byte of KV/SSM decoding state: the
 contiguous reference layout, the paged pool + block-table layout, and the
-`CacheStore` that accounts for both. See its module docstring for the
-memory model.
+`CacheStore` that accounts for both. `repro.serve.memory` is the policy
+layer above it: refcounted prefix sharing with copy-on-write, LRU
+eviction of cold indexed pages, and preemption victim selection. See the
+module docstrings for the memory model.
 """
 from repro.serve.cache import (CacheStore, PageLayout, cache_struct,
                                init_cache, init_paged, is_paged,
                                make_layout, paged_struct, serve_dtypes)
+from repro.serve.memory import MemoryManager, PrefixIndex
 
-__all__ = ["CacheStore", "PageLayout", "cache_struct", "init_cache",
-           "init_paged", "is_paged", "make_layout", "paged_struct",
-           "serve_dtypes"]
+__all__ = ["CacheStore", "MemoryManager", "PageLayout", "PrefixIndex",
+           "cache_struct", "init_cache", "init_paged", "is_paged",
+           "make_layout", "paged_struct", "serve_dtypes"]

@@ -32,6 +32,16 @@ per-slot rows copied into their assigned slots), `gather_view` returns the
 per-row contiguous view + positions for host-side inspection, and
 `stats()` reports page utilization and bytes (the honest per-stage HBM
 number the partitioner can price).
+
+Pages are **refcounted**: `alloc(slot, tokens, shared=pages)` maps an
+already-resident prefix (another slot's pages, or cold indexed ones) into
+the new slot's block table and only draws the remainder from the free
+list — the mechanics under `repro.serve.memory`'s prefix sharing. A page
+returns to the free list when its last mapping drops *and* no index hold
+(`retain`/`release`) keeps it resident; `copy_page` is the copy-on-write
+primitive; `last_touch` carries the LRU stamp the eviction policy sorts
+by. `pages_in_use` counts **distinct** physical pages — a page mapped
+into five block tables is one page of HBM, not five.
 """
 from __future__ import annotations
 
@@ -371,6 +381,16 @@ class CacheStore:
         self._free = list(range(layout.num_pages)) if self._has_pool else []
         self._owned: dict[int, list[int]] = {}
         self.peak_pages = 0
+        # refcounted sharing (repro.serve.memory drives the policy):
+        # _ref[p] counts block-table mappings of page p; _retained marks
+        # pages the prefix index holds resident at refcount zero (cold —
+        # evictable, not free); last_touch is the LRU stamp the eviction
+        # policy orders cold pages by; cow_copies counts copy-on-write
+        # page duplications taken
+        self._ref = np.zeros(layout.num_pages, np.int32)
+        self._retained: set[int] = set()
+        self.last_touch = np.zeros(layout.num_pages, np.int64)
+        self.cow_copies = 0
 
     # ---- accounting --------------------------------------------------
     @property
@@ -379,17 +399,34 @@ class CacheStore:
 
     @property
     def pages_in_use(self) -> int:
+        """Distinct physical pages not on the free list (mapped by at
+        least one slot, or held cold by the prefix index). A page shared
+        across N block tables counts once — it is one page of HBM."""
         return self.pages_total - len(self._free)
 
-    def can_alloc(self, tokens: int) -> bool:
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_cold(self) -> int:
+        """Resident pages no slot maps: index-retained, evictable."""
+        return sum(1 for p in self._retained if self._ref[p] == 0)
+
+    def can_alloc(self, tokens: int, shared: int = 0) -> bool:
+        """Admission gate: `shared` pages of the request come mapped from
+        the prefix index, only the remainder draws on the free list."""
         if not self._has_pool:
             return True
-        return len(self._free) >= self.layout.pages_for(tokens)
+        return len(self._free) >= self.layout.pages_for(tokens) - shared
 
-    def alloc(self, slot: int, tokens: int) -> None:
-        """Map pages for `tokens` logical positions onto `slot`. Raises
-        when the pool is exhausted — the Scheduler gates admission on
-        can_alloc() instead of over-reserving."""
+    def alloc(self, slot: int, tokens: int, shared=()) -> None:
+        """Map pages for `tokens` logical positions onto `slot`. The
+        leading `shared` pages are already-resident prefix pages
+        (refcounts bumped, nothing drawn from the free list); the
+        remainder comes fresh from the pool. Raises when the pool is
+        exhausted — the Scheduler gates admission on can_alloc() instead
+        of over-reserving."""
         lo = self.layout
         if slot in self._owned:
             raise ValueError(f"slot {slot} already holds pages; free() it "
@@ -397,29 +434,89 @@ class CacheStore:
         if tokens > lo.max_len:
             raise ValueError(f"{tokens} tokens exceed max_len={lo.max_len}")
         if not self._has_pool:
+            if shared:
+                raise ValueError("shared prefix pages need a kv_full pool; "
+                                 "this family's state is per-slot only")
             self._owned[slot] = []
             return
+        shared = list(shared)
         need = lo.pages_for(tokens)
-        if need > len(self._free):
+        if len(shared) > need:
+            raise ValueError(f"{len(shared)} shared pages exceed the "
+                             f"{need} pages {tokens} tokens need")
+        for p in shared:
+            if self._ref[p] == 0 and p not in self._retained:
+                raise ValueError(f"shared page {p} is not resident (free "
+                                 f"list); the prefix index is stale")
+        fresh_n = need - len(shared)
+        if fresh_n > len(self._free):
             raise RuntimeError(
-                f"page pool exhausted: need {need} pages for {tokens} "
-                f"tokens, {len(self._free)}/{lo.num_pages} free")
-        pages = self._free[:need]
-        del self._free[:need]
+                f"page pool exhausted: need {fresh_n} fresh pages for "
+                f"{tokens} tokens ({len(shared)} shared), "
+                f"{len(self._free)}/{lo.num_pages} free")
+        fresh = self._free[:fresh_n]
+        del self._free[:fresh_n]
+        pages = shared + fresh
+        for p in pages:
+            self._ref[p] += 1
         self._owned[slot] = pages
         self._tab[slot, :] = -1
         self._tab[slot, :need] = pages
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         self._sync_tab()
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> list:
+        """Unmap `slot`'s pages. Each page's refcount drops; pages
+        reaching zero return to the free list unless the prefix index
+        retains them — those go *cold* (resident, evictable) and are
+        returned so the caller can stamp their LRU clock."""
         pages = self._owned.pop(slot, None)
         if not pages:
-            return
-        self._free.extend(pages)
+            return []
+        cold = []
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                if p in self._retained:
+                    cold.append(p)
+                else:
+                    self._free.append(p)
         self._free.sort()
         self._tab[slot, :] = -1
         self._sync_tab()
+        return cold
+
+    # ---- sharing / eviction mechanics (policy in repro.serve.memory) --
+    def retain(self, page: int) -> None:
+        """Prefix-index hold: keep `page` resident when its last slot
+        mapping drops (cold, evictable — not free)."""
+        self._retained.add(page)
+
+    def release(self, page: int) -> bool:
+        """Drop the index hold on `page` (eviction). Returns True when
+        the page went back to the free list — i.e. no slot still maps
+        it; a mapped page frees later, on its last unmap."""
+        self._retained.discard(page)
+        if self._ref[page] == 0 and page not in self._free:
+            self._free.append(page)
+            self._free.sort()
+            return True
+        return False
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write primitive: device-copy page `src` -> `dst`
+        across the K and V pools of every layer group. The writer maps
+        the copy; the shared original stays immutable."""
+        k, v = self.tree["kv_full"]
+        self.tree["kv_full"] = (k.at[:, dst].set(k[:, src]),
+                                v.at[:, dst].set(v[:, src]))
+        self.cow_copies += 1
+
+    def touch(self, pages, step: int) -> None:
+        """Stamp pages' last_touch with the current decode step — the
+        LRU clock eviction orders cold pages by."""
+        for p in pages:
+            self.last_touch[p] = step
 
     def _sync_tab(self) -> None:
         tab = jnp.asarray(self._tab)
@@ -428,15 +525,23 @@ class CacheStore:
         self.tree["block_tab"] = tab
 
     # ---- views / updates ---------------------------------------------
-    def prefill_input(self, slots):
+    def prefill_input(self, slots, skip_pages=None):
         """The cache tree a prefill step writes into: the live page pool,
         a block table whose row j maps to slots[j]'s pages (-1 rows for
         unused prefill rows), and fresh zeroed per-slot state (computed
-        into prefill rows, then adopted via append_rows)."""
+        into prefill rows, then adopted via append_rows).
+
+        skip_pages[j] masks row j's first N page entries to -1 *in this
+        prefill view only*: those pages hold a shared, already-written
+        prefix, so the row's recomputed K/V for them routes to the trash
+        page instead of rewriting shared state. The store's real block
+        table keeps the mapping — decode reads the shared pages."""
         lo = self.layout
         tab = np.full((lo.max_batch, lo.pages_per_slot), -1, np.int32)
         for j, s in enumerate(slots):
             tab[j] = self._tab[s]
+            if skip_pages is not None and skip_pages[j]:
+                tab[j, :skip_pages[j]] = -1
         fresh = init_paged(self.cfg, self.layout, dtype=self.dtype)
         fresh["block_tab"] = jnp.asarray(tab)
         if "kv_full" in self.tree:
@@ -500,6 +605,10 @@ class CacheStore:
             "pages_total": self.pages_total,
             "pages_in_use": self.pages_in_use,
             "pages_free": len(self._free),
+            "pages_cold": self.pages_cold,
+            "pages_shared": int((self._ref > 1).sum()) if self._has_pool
+            else 0,
+            "cow_copies": self.cow_copies,
             "peak_pages": self.peak_pages,
             "page_bytes": page_bytes,
             "pool_bytes": page_bytes * self.pages_total,

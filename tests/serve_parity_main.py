@@ -12,7 +12,10 @@ Checks, per architecture family:
      the pipelined decode step);
   4. the same holds with a paged KV pool (page_size < prompt_len): block-
      table reads/writes through the pipeline scan reproduce the
-     contiguous-degenerate streams bit for bit on both backends.
+     contiguous-degenerate streams bit for bit on both backends;
+  5. with ServeSpec.share_prefix, repeated prompts served through
+     refcounted shared pages (prefill skipping the matched prefix)
+     reproduce the unshared paged streams bit for bit on both backends.
 
 Run: python tests/serve_parity_main.py <arch> <seed>
 """
@@ -146,6 +149,37 @@ def main(arch_name: str, seed: int) -> int:
         # no page pool to ration (fixed-size per-slot state only)
         assert out_ps.pages_total == out_pr.pages_total == 0
     print("paged_scheduler_tokens_identical=1")
+
+    # Shared-prefix paged parity: every even rid repeats rid 0's prompt,
+    # so the prefix index maps them onto shared refcounted pages and
+    # prefill skips the matched writes — streams must still match the
+    # unshared paged run bit for bit on both backends
+    s_reqs = [Request(rid=i,
+                      prompt=(reqs[0] if i % 2 == 0 else reqs[i])
+                      .prompt.copy(),
+                      max_new_tokens=reqs[i].max_new_tokens)
+              for i in range(2 * B)]
+    shared = ServeSpec(prompt_len=PROMPT, gen=GEN, max_batch=B, page_size=4,
+                       share_prefix=True)
+    out_ss = Scheduler(Engine(spmd.replace(serve=shared))).run(
+        [Request(r.rid, r.prompt.copy(), r.max_new_tokens) for r in s_reqs])
+    out_sr = Scheduler(Engine(ref.replace(serve=shared))).run(
+        [Request(r.rid, r.prompt.copy(), r.max_new_tokens) for r in s_reqs])
+    out_ur = Scheduler(Engine(ref.replace(serve=paged))).run(s_reqs)
+    for a, b, c in zip(out_ss.requests, out_sr.requests, out_ur.requests):
+        assert a.rid == b.rid == c.rid
+        assert a.tokens == b.tokens == c.tokens, (a.rid, a.tokens, b.tokens,
+                                                  c.tokens)
+    if cfg.attn_type == "full":
+        # the page accounting is backend-independent too (peak contrasts
+        # vs unshared live in benchmarks/serve_bench.py's squeezed pool)
+        assert out_ss.prefix_hit_tokens > 0
+        assert out_ss.prefix_hit_tokens == out_sr.prefix_hit_tokens
+        assert out_ss.peak_pages == out_sr.peak_pages
+        assert out_ss.pages_shared == out_sr.pages_shared > 0
+    else:
+        assert out_ss.prefix_hit_tokens == out_sr.prefix_hit_tokens == 0
+    print("shared_prefix_tokens_identical=1")
     return 0
 
 

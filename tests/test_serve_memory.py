@@ -1,0 +1,379 @@
+"""The serve memory policy layer (repro.serve.memory): prefix-index
+matching and leaf-first LRU eviction, refcounted shared allocation and
+copy-on-write in the CacheStore, preemption victim selection — and the
+bit-identity invariant: share_prefix/evict/preempt never change a single
+emitted token across the three serve families."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Engine, Plan, ServeSpec
+from repro.api.report import ServeReport
+from repro.api.serving import Request, Scheduler
+from repro.configs import ARCHS, reduced
+from repro.obs import Tracer
+from repro.serve.cache import CacheStore, make_layout
+from repro.serve.memory import MemoryManager, PrefixIndex
+
+SERVE_ARCHS = ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b")
+
+_R = np.random.default_rng(31)
+_FAMILY_CASES = [(a, int(_R.integers(0, 1_000))) for a in SERVE_ARCHS]
+
+
+def _cfg(name: str, **over):
+    base = dict(num_layers=2, d_model=32, d_ff=64, vocab_size=256,
+                num_microbatches=2)
+    if ARCHS[name].attn_type == "swa":
+        base["window_size"] = 6        # < max_len: exercise the ring wrap
+    base.update(over)
+    return reduced(ARCHS[name], **base)
+
+
+def _streams(rep):
+    return {r.rid: list(r.tokens) for r in rep.requests}
+
+
+def _store(cfg, max_batch=4, max_len=16, page_size=4, max_pages=0):
+    return CacheStore(cfg, make_layout(max_batch, max_len,
+                                       page_size=page_size,
+                                       max_pages=max_pages),
+                      dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex
+# ---------------------------------------------------------------------------
+def test_prefix_index_match_and_insert():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg)
+    idx = PrefixIndex(4)
+    store.alloc(0, 16)                       # 4 pages
+    pages = store._owned[0]
+    prompt = list(range(10))                 # 2 full pages + 2-token tail
+    idx.insert(store, prompt, pages, step=1)
+    assert len(idx) == 3                     # the 4th page holds no prompt
+    # the whole prompt matches through the partial leaf
+    assert idx.match(prompt) == (10, pages[:3])
+    # a page-aligned prefix matches full pages only
+    assert idx.match(prompt[:8]) == (8, pages[:2])
+    # a partial run matches only as the *entire* remainder
+    assert idx.match(prompt[:9]) == (8, pages[:2])
+    assert idx.match(prompt[:4] + [99] * 6) == (4, pages[:1])
+    assert idx.match([99] * 8) == (0, [])
+    # idempotent reinsert keeps the original pages indexed
+    store.alloc(1, 16)
+    idx.insert(store, prompt, store._owned[1], step=2)
+    assert idx.match(prompt) == (10, pages[:3])
+
+
+def test_prefix_index_evict_lru_leaf_first():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg, max_batch=2, max_len=16, page_size=4)   # 8 pages
+    idx = PrefixIndex(4)
+    prompt = list(range(12))
+    store.alloc(0, 12)                       # 3 pages
+    p = store._owned[0]
+    idx.insert(store, prompt, p, step=1)
+    cold = store.free(0)                     # all 3 go cold, not free
+    assert sorted(cold) == sorted(p)
+    assert store.pages_free == 5 and store.pages_cold == 3
+    keys = set()
+    # reclaim 2: leaf-first means the deepest page goes before its parent
+    assert idx.evict_lru(store, need_free=7, evicted_keys=keys) == 2
+    assert store.pages_free == 7
+    assert idx.match(prompt) == (4, p[:1])
+    assert tuple(prompt) in keys             # the full chain was cut
+    # protect pins a page the in-flight admission matched
+    assert idx.evict_lru(store, need_free=8, protect={p[0]}) == 0
+    assert idx.evict_lru(store, need_free=8) == 1
+    assert store.pages_free == 8 and len(idx) == 0
+
+
+def test_evict_skips_pages_still_mapped():
+    """A cold parent whose child page is still slot-mapped cannot exist
+    (mapping is chain-wise), but a retained page with refcount > 0 must
+    never be reclaimed — release defers the free to the last unmap."""
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg)
+    idx = PrefixIndex(4)
+    prompt = list(range(8))
+    store.alloc(0, 16)
+    p = store._owned[0]
+    idx.insert(store, prompt, p, step=0)
+    # slot 0 still maps every page: nothing is evictable
+    assert idx.evict_lru(store, need_free=16) == 0
+    store.free(0)
+    assert idx.evict_lru(store, need_free=16) == 2
+
+
+# ---------------------------------------------------------------------------
+# CacheStore refcounting / CoW
+# ---------------------------------------------------------------------------
+def test_store_shared_alloc_counts_distinct_pages():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg, max_batch=4, max_len=16, page_size=4, max_pages=8)
+    store.alloc(0, 16)
+    p = store._owned[0]
+    assert store.pages_in_use == 4
+    store.alloc(1, 16, shared=p[:2])
+    # 2 shared + 2 fresh: 6 *distinct* pages, not 8
+    assert store.pages_in_use == 6
+    assert store.stats()["pages_shared"] == 2
+    assert store._ref[p[0]] == 2 and store._ref[p[2]] == 1
+    assert store.can_alloc(16, shared=2) and not store.can_alloc(16)
+    # the shared prefix shows up in both block tables
+    tab = store._tab
+    assert list(tab[0][:2]) == list(tab[1][:2]) == p[:2]
+    store.free(0)
+    assert store._ref[p[0]] == 1             # slot 1 still maps it
+    store.free(1)
+    assert store.pages_in_use == 0
+
+
+def test_store_retained_pages_go_cold_not_free():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg, max_batch=2, max_len=8, page_size=4)
+    store.alloc(0, 8)
+    p = store._owned[0]
+    store.retain(p[0])
+    cold = store.free(0)
+    assert cold == [p[0]]
+    assert store.pages_cold == 1 and store.pages_free == 3
+    assert store.release(p[0])               # hold dropped -> free
+    assert store.pages_free == 4
+    # a freed page is no longer a valid shared mapping
+    with pytest.raises(ValueError, match="not resident"):
+        store.alloc(1, 8, shared=[p[0]])
+
+
+def test_store_copy_page_device_copy():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg, max_batch=2, max_len=8, page_size=4)
+    k, v = store.tree["kv_full"]
+    store.tree["kv_full"] = (k.at[:, 1].set(7.0), v.at[:, 1].set(3.0))
+    store.copy_page(1, 2)
+    k2, v2 = store.tree["kv_full"]
+    assert np.all(np.asarray(k2[:, 2]) == 7.0)
+    assert np.all(np.asarray(v2[:, 2]) == 3.0)
+    assert store.cow_copies == 1
+
+
+def test_pool_less_store_rejects_shared_pages():
+    cfg = _cfg("rwkv6-3b")
+    store = _store(cfg)
+    assert not store._has_pool
+    with pytest.raises(ValueError, match="per-slot only"):
+        store.alloc(0, 8, shared=[0])
+
+
+# ---------------------------------------------------------------------------
+# ServeReport.page_utilization regression: peak *distinct* pages
+# ---------------------------------------------------------------------------
+def test_page_utilization_reports_peak_distinct_pages():
+    """Regression: utilization is peak_pages / pages_total. The old
+    time-averaged page_steps formula (here 32 / (4 * 10) = 0.8) double-
+    counted shared pages and answered the wrong sizing question."""
+    rep = ServeReport(decode_steps=4, pages_total=10, peak_pages=4,
+                      page_steps=32)
+    assert rep.page_utilization() == pytest.approx(0.4)
+    assert ServeReport().page_utilization() is None
+    assert ServeReport(decode_steps=4, pages_total=0,
+                       page_steps=32).page_utilization() is None
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec knob validation
+# ---------------------------------------------------------------------------
+def test_evict_requires_share_prefix():
+    cfg = _cfg("qwen3-0.6b")
+    with pytest.raises(ValueError, match="share_prefix"):
+        Plan(arch=cfg, serve=ServeSpec(prompt_len=8, gen=8, max_batch=2,
+                                       page_size=4, evict=True))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity across families: sharing / eviction / preemption never
+# change a token
+# ---------------------------------------------------------------------------
+def _sv(**over):
+    base = dict(prompt_len=8, gen=8, max_batch=4, page_size=4, max_pages=12)
+    base.update(over)
+    return ServeSpec(**base)
+
+
+def _run(cfg, sv, reqs):
+    return Scheduler(Engine(Plan(arch=cfg, serve=sv))).run(reqs)
+
+
+@pytest.mark.parametrize("arch,seed", _FAMILY_CASES)
+def test_shared_prefix_streams_bit_identical(arch, seed):
+    """Repeated prompts served through shared refcounted pages emit the
+    same tokens as the unshared baseline; the full-attention family peaks
+    strictly below it, pool-less families stay inert (counters 0)."""
+    cfg = _cfg(arch)
+    rng = np.random.default_rng(seed)
+    ps = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+          for _ in range(2)]
+    mk = lambda: [Request(rid=i, prompt=ps[i % 2].copy(), max_new_tokens=4)
+                  for i in range(6)]
+    base = _run(cfg, _sv(), mk())
+    shared = _run(cfg, _sv(share_prefix=True), mk())
+    assert _streams(shared) == _streams(base)
+    if cfg.attn_type == "full":
+        assert shared.prefix_hit_tokens > 0
+        assert shared.pages_shared > 0
+        assert shared.peak_pages < base.peak_pages
+    else:
+        assert shared.pages_total == 0
+        assert shared.prefix_hit_tokens == shared.pages_shared == 0
+        assert shared.admit_blocked == 0
+
+
+def test_cow_on_fully_matched_partial_page():
+    """A prompt ending inside a page shares it by copy-on-write: the
+    sharer decodes into its copy, the indexed original stays immutable,
+    and the streams stay bit-identical."""
+    cfg = _cfg("qwen3-0.6b")
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+    mk = lambda: [Request(rid=i, prompt=prompt.copy(), max_new_tokens=4)
+                  for i in range(4)]
+    base = _run(cfg, _sv(), mk())
+    shared = _run(cfg, _sv(share_prefix=True), mk())
+    assert _streams(shared) == _streams(base)
+    assert shared.cow_copies > 0
+    assert shared.prefix_hit_tokens > 0
+
+
+@pytest.mark.parametrize("arch,seed", _FAMILY_CASES)
+def test_evict_readmit_streams_bit_identical(arch, seed):
+    """Cold indexed pages reclaimed under pressure, then the evicted
+    prompt readmitted: recompute-on-readmit, identical streams. rid 0
+    retires first so its pages are the LRU victims; rid 6 repeats its
+    prompt after the pool churned."""
+    cfg = _cfg(arch)
+    rng = np.random.default_rng(seed)
+    ps = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+          for _ in range(6)]
+    order = ps + [ps[0]]
+    gens = [2, 6, 6, 6, 6, 6, 2]
+    mk = lambda: [Request(rid=i, prompt=order[i].copy(),
+                          max_new_tokens=gens[i]) for i in range(7)]
+    base = _run(cfg, _sv(), mk())
+    ev = _run(cfg, _sv(share_prefix=True, evict=True), mk())
+    assert _streams(ev) == _streams(base)
+    if cfg.attn_type == "full":
+        assert ev.evictions > 0
+        assert ev.readmit_recomputes > 0
+    else:
+        assert ev.evictions == ev.readmit_recomputes == 0
+
+
+@pytest.mark.parametrize("arch,seed", _FAMILY_CASES)
+def test_preempt_streams_bit_identical(arch, seed):
+    """Under pool pressure a victim is preempted and replayed from its
+    prompt instead of blocking admission; the replayed stream is
+    bit-identical and blocked rounds do not increase."""
+    cfg = _cfg(arch)
+    rng = np.random.default_rng(seed)
+    mk = lambda: [Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size, 8,
+                                              dtype=np.int32))
+                  for i in range(4)]
+    reqs = mk()
+    copies = lambda: [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                      for r in reqs]
+    base = _run(cfg, _sv(), copies())
+    pre = _run(cfg, _sv(preempt=True), copies())
+    assert _streams(pre) == _streams(base)
+    if cfg.attn_type == "full":
+        assert pre.preemptions > 0
+        assert pre.admit_blocked <= base.admit_blocked
+    else:
+        assert pre.preemptions == 0 and pre.admit_blocked == 0
+
+
+def test_shared_prefix_sampled_streams_bit_identical():
+    """Bit-identity holds under sampling too: token picks are keyed by
+    (sample_seed, rid, k), independent of sharing and co-batching."""
+    cfg = _cfg("qwen3-0.6b")
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    mk = lambda: [Request(rid=i, prompt=prompt.copy(), max_new_tokens=4)
+                  for i in range(5)]
+    kw = dict(temperature=1.0, sample_seed=5)
+    base = _run(cfg, _sv(**kw), mk())
+    shared = _run(cfg, _sv(share_prefix=True, evict=True, preempt=True,
+                           **kw), mk())
+    assert _streams(shared) == _streams(base)
+    assert shared.prefix_hit_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption victim selection
+# ---------------------------------------------------------------------------
+class _FakeReq:
+    def __init__(self, rid, deadline=0):
+        self.rid, self.deadline = rid, deadline
+
+
+class _FakeStats:
+    def __init__(self, tokens):
+        self.tokens = tokens
+
+
+class _FakeSlot:
+    def __init__(self, rid, tokens, limit=8, deadline=0):
+        self.req = _FakeReq(rid, deadline)
+        self.stats = _FakeStats(list(tokens))
+        self.limit = limit
+
+
+def test_victim_policies():
+    cfg = _cfg("qwen3-0.6b")
+    store = _store(cfg, max_batch=4, max_len=16, page_size=4)
+    store.alloc(0, 16)
+    store.alloc(1, 16)
+    fifo = MemoryManager(store, preempt=True, policy="fifo")
+    # fifo: fewest generated tokens (cheapest replay), rid tie-break
+    active = {0: _FakeSlot(0, [1, 2, 3]), 1: _FakeSlot(1, [1])}
+    assert fifo.victim(active, step=5, need_fresh=4) == 1
+    # deadline: most slack first; no deadline = infinite slack
+    edf = MemoryManager(store, preempt=True, policy="deadline")
+    active = {0: _FakeSlot(0, [1, 2, 3], deadline=0),
+              1: _FakeSlot(1, [1], limit=4, deadline=30)}
+    assert edf.victim(active, step=5, need_fresh=4) == 0
+    # a victim that cannot cover the shortfall is never nominated
+    assert fifo.victim(active, step=5, need_fresh=64) is None
+    off = MemoryManager(store, preempt=False)
+    assert off.victim(active, step=5, need_fresh=1) is None
+
+
+def test_pool_less_manager_is_inert():
+    cfg = _cfg("rwkv6-3b")
+    store = _store(cfg)
+    mm = MemoryManager(store, share_prefix=True, evict=True, preempt=True)
+    assert not (mm.share_prefix or mm.evict or mm.preempt)
+    assert mm.plan_admit(np.arange(8), 16) == (0, [], 0)
+    assert mm.make_room(10**6)
+    assert mm.admit(0, np.arange(8), 16, 0, [], step=0) == 0
+    assert mm.victim({0: _FakeSlot(0, [1])}, step=0, need_fresh=1) is None
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+def test_memory_counters_reach_telemetry():
+    cfg = _cfg("qwen3-0.6b")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompt.copy()) for i in range(4)]
+    plan = Plan(arch=cfg, serve=_sv(share_prefix=True, evict=True,
+                                    preempt=True))
+    rep = Scheduler(Engine(plan, tracer=Tracer())).run(reqs)
+    tel = rep.telemetry
+    assert tel is not None
+    assert tel.gauges["serve/prefix_hit_rate"] > 0
+    assert tel.counters.get("serve/preemptions", 0) == rep.preemptions
+    assert tel.counters.get("serve/evictions", 0) == rep.evictions
