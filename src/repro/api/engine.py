@@ -359,7 +359,7 @@ class Engine:
         _, cache_dt = self._serve_dtypes()
 
         if run.backend != "spmd":
-            pre_fn, dec_fn = _ref_serve_steps(cfg)
+            pre_fn, dec_fn = _ref_serve_steps(cfg, sv.kernel_backend)
             self._serve = {"mode": "ref", "cfg": cfg, "params": self._params,
                            "prefill": jax.jit(pre_fn),
                            "decode": jax.jit(dec_fn),
@@ -386,7 +386,8 @@ class Engine:
         common = dict(arch=cfg, optimizer=run.optimizer, lr=run.lr,
                       weight_decay=run.weight_decay,
                       compute_dtype=run.compute_dtype,
-                      cache_dtype=sv.cache_dtype, overlap=run.overlap)
+                      cache_dtype=sv.cache_dtype, overlap=run.overlap,
+                      kernel_backend=sv.kernel_backend)
         rc_pre = RunConfig(shape=ShapeConfig("serve_prefill", sv.prompt_len,
                                              sv.max_batch, "prefill"),
                            **common)
@@ -434,7 +435,7 @@ class Engine:
                                        max_pages=sv.max_pages)
 
         if st["mode"] != "spmd":
-            pre_fn, dec_fn = _ref_paged_steps(cfg)
+            pre_fn, dec_fn = _ref_paged_steps(cfg, sv.kernel_backend)
             self._serve_paged = {"layout": layout, "shardings": None,
                                  "prefill": jax.jit(pre_fn),
                                  "decode": jax.jit(dec_fn)}
@@ -449,7 +450,8 @@ class Engine:
         common = dict(arch=cfg, optimizer=run.optimizer, lr=run.lr,
                       weight_decay=run.weight_decay,
                       compute_dtype=run.compute_dtype,
-                      cache_dtype=sv.cache_dtype, overlap=run.overlap)
+                      cache_dtype=sv.cache_dtype, overlap=run.overlap,
+                      kernel_backend=sv.kernel_backend)
         rc_pre = RunConfig(shape=ShapeConfig("serve_prefill", sv.prompt_len,
                                              sv.max_batch, "prefill"),
                            **common)
@@ -1015,42 +1017,50 @@ class Engine:
 # ---------------------------------------------------------------------------
 # serve helpers (module level so jit caches don't capture the Engine)
 # ---------------------------------------------------------------------------
-def _ref_serve_steps(cfg):
+def _ref_serve_steps(cfg, kernel_backend="ref"):
     """The non-pipelined forward_ref cache path: (prefill_fn, decode_fn),
-    each jittable. This is the serve correctness oracle the pipelined mesh
-    steps are parity-tested against."""
+    each jittable. With kernel_backend="ref" this is the serve correctness
+    oracle the pipelined mesh steps (and the Pallas kernel backends) are
+    parity-tested against; "interpret"/"tpu" route the attention/SSM mixes
+    through repro.kernels."""
     from repro.models import lm
 
     def pre_fn(params, prompts, cache):
         hid, cache, _ = lm.forward_ref(cfg, params, prompts, mode="prefill",
-                                       cache=cache)
+                                       cache=cache,
+                                       kernel_backend=kernel_backend)
         return lm.logits_ref(cfg, params, hid[:, -1:]), cache
 
     def dec_fn(params, tokens, cache, pos):
         hid, cache, _ = lm.forward_ref(cfg, params, tokens, mode="decode",
-                                       cache=cache, pos=pos)
+                                       cache=cache, pos=pos,
+                                       kernel_backend=kernel_backend)
         return lm.logits_ref(cfg, params, hid), cache
 
     return pre_fn, dec_fn
 
 
-def _ref_paged_steps(cfg):
+def _ref_paged_steps(cfg, kernel_backend="ref"):
     """forward_ref over the paged cache tree (threads backend): variable-
-    length prefill through the block table + per-row-position decode."""
+    length prefill through the block table + per-row-position decode. With
+    a kernel backend the decode walks the block table inside the Pallas
+    kernel (no gathered KV view)."""
     import jax.numpy as jnp
 
     from repro.models import lm
 
     def pre_fn(params, prompts, lens, cache):
         hid, cache, _ = lm.forward_ref(cfg, params, prompts, mode="prefill",
-                                       cache=cache, lens=lens)
+                                       cache=cache, lens=lens,
+                                       kernel_backend=kernel_backend)
         last = jnp.take_along_axis(
             hid, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
         return lm.logits_ref(cfg, params, last), cache
 
     def dec_fn(params, tokens, cache, pos):
         hid, cache, _ = lm.forward_ref(cfg, params, tokens, mode="decode",
-                                       cache=cache, pos=pos)
+                                       cache=cache, pos=pos,
+                                       kernel_backend=kernel_backend)
         return lm.logits_ref(cfg, params, hid), cache
 
     return pre_fn, dec_fn

@@ -132,6 +132,8 @@ class ServeSpec:
     share_prefix: bool = False      # refcounted prefix sharing + CoW
     evict: bool = False             # LRU-evict cold indexed pages
     preempt: bool = False           # preempt + replay instead of refusing
+    kernel_backend: str = "ref"     # "ref" jnp paths | "interpret"/"tpu"
+                                    # Pallas kernels on the serve hot paths
 
     @property
     def max_len(self) -> int:
@@ -399,6 +401,10 @@ class Plan:
             raise ValueError(f"unknown serve cache_dtype "
                              f"{sv.cache_dtype!r}; expected '' (compute "
                              f"dtype) or 'f8'")
+        if sv.kernel_backend not in ("ref", "interpret", "tpu"):
+            raise ValueError(f"unknown serve kernel_backend "
+                             f"{sv.kernel_backend!r}: expected one of "
+                             f"('ref', 'interpret', 'tpu')")
         if sv.page_size < 0 or sv.max_pages < 0:
             raise ValueError(f"page_size={sv.page_size} and "
                              f"max_pages={sv.max_pages} must be >= 0 "

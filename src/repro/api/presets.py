@@ -135,6 +135,20 @@ def serve_paged() -> Plan:
                                 page_size=4, max_pages=12))
 
 
+@preset("serve_kernels")
+def serve_kernels() -> Plan:
+    """Paged continuous batching on the Pallas kernel backend (interpret
+    mode): decode walks the KV pool through the block table *inside* the
+    flash-decode kernel (scalar-prefetch index map — no gathered KV view),
+    prefill runs the flash-attention kernel, and the SSM families run the
+    chunked Pallas mixes. Token streams are bit-identical to the "ref"
+    jnp oracle (tests/serve_parity_main.py)."""
+    return Plan(arch=_tiny_arch(),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4,
+                                page_size=4, max_pages=12,
+                                kernel_backend="interpret"))
+
+
 @preset("serve_shared")
 def serve_shared() -> Plan:
     """Prefix-shared paged serving under memory pressure: identical

@@ -190,6 +190,10 @@ class RunConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
     cache_dtype: str = ""           # "" -> compute_dtype; "f8" halves KV traffic
+    # which implementation runs the hot-path attention/SSM mixes:
+    # "ref" = pure-jnp, "interpret"/"tpu" = the repro.kernels Pallas kernels
+    # (interpret mode executes the kernel bodies in Python — CI parity)
+    kernel_backend: str = "ref"
     # software-pipelined (skewed) schedule: issue the boundary-activation
     # ppermute of tick t concurrently with tick t+1's stage compute
     overlap: bool = False

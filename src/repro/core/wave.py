@@ -90,7 +90,8 @@ def _stage_apply(cfg, blocks_local, x, meta_arrs, ctx: LayerCtx, cache_local):
 def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
                   mode: str, nm: int, cache_local=None, pos=None, lens=None,
                   tp_axis: Optional[str], merge_axis: Optional[str],
-                  seq_offset=0, remat: bool = False, overlap: bool = False):
+                  seq_offset=0, remat: bool = False, overlap: bool = False,
+                  kernel_backend: str = "ref"):
     """x_local [Bl, S, d] (this VW's wave batch). Returns (y [Bl,S,d] — valid
     on the last stage — cache_local, aux).
 
@@ -120,7 +121,8 @@ def pipeline_wave(cfg: ArchConfig, blocks_local, x_local, meta_local, *,
     def stage_call(x_in, cache_mb, tick_valid, pos_, lens_=None):
         ctx = LayerCtx(mode=mode, pos=pos_, tp_axis=tp_axis,
                        merge_axis=merge_axis, seq_offset=seq_offset,
-                       valid=tick_valid, lens=lens_)
+                       valid=tick_valid, lens=lens_,
+                       kernel_backend=kernel_backend)
         return _stage_apply(cfg, blocks_local, x_in, meta_arrs, ctx, cache_mb)
 
     stage_fn = jax.checkpoint(stage_call) if (remat and mode == "train") \
@@ -345,7 +347,7 @@ def build_decode_step(run: RunConfig, mesh: Mesh, *,
         y, cache, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="decode", nm=nm, cache_local=cache,
             pos=pos, tp_axis=tp_axis, merge_axis=merge_axis, seq_offset=so,
-            overlap=run.overlap)
+            overlap=run.overlap, kernel_backend=run.kernel_backend)
         return _bcast_from_last(y, cfg.stages), cache, aux
 
     pipe = shard_map(
@@ -403,7 +405,7 @@ def build_prefill_step(run: RunConfig, mesh: Mesh, *, cache_len: int = 0,
         y, cache, aux = pipeline_wave(
             cfg, blocks, x, meta, mode="prefill", nm=nm, cache_local=cache,
             pos=None, lens=lens, tp_axis=tp_axis, merge_axis=None,
-            overlap=run.overlap)
+            overlap=run.overlap, kernel_backend=run.kernel_backend)
         if lens is None:
             last = y[:, -1:]
         else:

@@ -12,23 +12,46 @@ convention ([B, H, S, hd]) live here.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.mamba_ssd import ssd_chunked
 from repro.kernels.moe_gmm import grouped_matmul
 from repro.kernels.rwkv6_scan import rwkv6_chunked
 
+BACKENDS = ("ref", "interpret", "tpu")
+
 KERNEL_BACKEND = "ref"
+
+
+def check_backend(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r}: expected one of {BACKENDS}")
+    return name
 
 
 def set_backend(name: str):
     global KERNEL_BACKEND
-    assert name in ("ref", "interpret", "tpu")
-    KERNEL_BACKEND = name
+    KERNEL_BACKEND = check_backend(name)
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped backend switch — restores the previous backend on exit, so
+    parity tests cannot leak a process-global setting into each other."""
+    global KERNEL_BACKEND
+    prev = KERNEL_BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        KERNEL_BACKEND = prev
 
 
 def _interp():
@@ -50,12 +73,26 @@ def attention(q, k, v, *, causal=True, window=0, backend=None):
 
 
 def decode_attention(q1, k, v, length, *, window=0, backend=None):
-    """q1 [B,H,hd]; k/v [B,KV,S,hd] kernel-native."""
+    """q1 [B,H,hd]; k/v [B,KV,S,hd] kernel-native; length scalar or [B]."""
     be = backend or KERNEL_BACKEND
     if be == "ref":
         return kref.decode_ref(q1, k, v, length, window=window)
     return flash_decode(q1, k, v, length, window=window,
                         interpret=(be == "interpret"))
+
+
+def decode_attention_paged(q1, k_pool, v_pool, block_tab, lengths, *,
+                           layer=0, backend=None):
+    """Fused paged decode: pools [groups, num_pages+1, page_size, KV, hd]
+    walked through block_tab [B, pages_per_slot] with per-row lengths.
+    The "ref" backend gathers the paged view first (the materialization the
+    kernel backends avoid)."""
+    be = backend or KERNEL_BACKEND
+    if be == "ref":
+        return kref.decode_paged_ref(q1, k_pool, v_pool, block_tab, lengths,
+                                     layer=layer)
+    return flash_decode_paged(q1, k_pool, v_pool, block_tab, lengths,
+                              layer=layer, interpret=(be == "interpret"))
 
 
 def rwkv6(r, k, v, w, u, *, backend=None):

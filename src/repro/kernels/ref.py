@@ -37,20 +37,48 @@ def attention_ref(q, k, v, *, causal=True, window=0):
 
 
 def decode_ref(q1, k, v, length, *, window=0):
-    """q1 [B, H, hd]; k/v [B, KV, S, hd]; attend to positions < length."""
+    """q1 [B, H, hd]; k/v [B, KV, S, hd]; attend to positions < length.
+
+    `length` is a scalar or a per-row [B] vector. Fully-masked rows
+    (length == 0) return zeros — the same contract as the Pallas kernel's
+    `l = max(l, 1e-30)` guard (a plain softmax would degenerate to a
+    uniform average over uninitialized V rows)."""
     B, H, hd = q1.shape
     KV, S = k.shape[1], k.shape[2]
     G = H // KV
     qf = q1.astype(jnp.float32).reshape(B, KV, G, hd)
     s = jnp.einsum("bkgd,bkcd->bkgc", qf, k.astype(jnp.float32)) * hd ** -0.5
     pos = jnp.arange(S)[None, None, None, :]
-    valid = pos < length
+    lens = jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1),
+                            (B,))[:, None, None, None]
+    valid = pos < lens
     if window > 0:
-        valid &= pos >= (length - window)
+        valid &= pos >= (lens - window)
     s = jnp.where(valid, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgc,bkcd->bkgd", p, v.astype(jnp.float32))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgc,bkcd->bkgd", p / l, v.astype(jnp.float32))
     return o.reshape(B, H, hd).astype(q1.dtype)
+
+
+def decode_paged_ref(q1, k_pool, v_pool, block_tab, lengths, *, layer=0):
+    """Oracle for flash_decode_paged: gather the paged pool into a
+    contiguous per-row view (exactly the materialization the fused kernel
+    avoids), then run decode_ref with per-row lengths.
+
+    q1 [B,H,hd]; pools [groups, num_pages+1, page_size, KV, hd] (last page
+    = trash); block_tab [B, pages_per_slot] int32 (-1 = unmapped ->
+    trash); lengths scalar or [B]."""
+    B = q1.shape[0]
+    groups, P1, ps, KV, hd = k_pool.shape
+    phys = jnp.where(block_tab >= 0, block_tab, P1 - 1)     # [B, npg]
+
+    def view(pool):
+        pages = pool[layer][phys]                           # [B,npg,ps,KV,hd]
+        return pages.reshape(B, -1, KV, hd).transpose(0, 2, 1, 3)
+
+    return decode_ref(q1, view(k_pool), view(v_pool), lengths, window=0)
 
 
 def rwkv6_ref(r, k, v, w, u, state0=None):

@@ -35,6 +35,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--backend", choices=("threads", "spmd"),
                     default="threads")
+    ap.add_argument("--kernel-backend", choices=("ref", "interpret", "tpu"),
+                    default="ref",
+                    help="hot-path attention/SSM implementation "
+                         "(ServeSpec.kernel_backend): 'ref' = jnp, "
+                         "'interpret' = Pallas kernels executed in Python "
+                         "(CPU parity), 'tpu' = compiled Mosaic kernels")
     ap.add_argument("--mesh", default="1,2,1",
                     help="spmd backend: data,stages,tp (data must be 1)")
     ap.add_argument("--devices", type=int, default=0,
@@ -125,7 +131,8 @@ def main(argv=None):
                                 page_size=a.page_size,
                                 max_pages=a.max_pages,
                                 share_prefix=a.share_prefix,
-                                evict=a.evict, preempt=a.preempt),
+                                evict=a.evict, preempt=a.preempt,
+                                kernel_backend=a.kernel_backend),
                 run=RunSpec(backend=a.backend),
                 **fault_kwargs)
     from repro.obs import NULL_TRACER, Tracer

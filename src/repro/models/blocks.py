@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import attention as attn_lib
 from repro.models import ssm as ssm_lib
 from repro.models.layers import rms_norm, layer_norm, rope_cos_sin, apply_rope
@@ -40,6 +41,10 @@ class LayerCtx:
     lens: Any = None                # per-row prompt lengths ([B]) — prefill
                                     # of variable-length (right-padded)
                                     # prompts; None = every row is full
+    kernel_backend: str = "ref"     # "ref" = jnp paths; "interpret"/"tpu"
+                                    # route the full-attention prefill/decode
+                                    # and chunked SSM mixes through the
+                                    # repro.kernels Pallas kernels
 
 
 def _psum(x, axis):
@@ -114,6 +119,9 @@ def _attn_train(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
     B, S, Hl, hd = q.shape
 
     def full_path():
+        if ctx.kernel_backend != "ref":
+            return kernel_ops.attention(q, k, v, causal=True, window=0,
+                                        backend=ctx.kernel_backend)
         return attn_lib.flash_attention(q, k, v, causal=True, window=0)
 
     def win_path():
@@ -207,10 +215,18 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         kf = cache_lib.page_write_token(kf, i, tab, pos_b, k, sel_b)
         vf = cache_lib.page_write_token(vf, i, tab, pos_b, v, sel_b)
         new_cache["kv_full"] = (kf, vf)
-        k_view, gpos = cache_lib.page_view(kf, i, tab)
-        v_view, _ = cache_lib.page_view(vf, i, tab)
-        o_full = attn_lib.decode_attend(q, k_view, v_view, gpos, ctx.pos,
-                                        window=0, merge_axis=None)
+        if ctx.kernel_backend != "ref":
+            # fused walk: the kernel indexes the pool through the block
+            # table with per-row lengths — no page_view materialization
+            lens_row = jnp.clip(pos_b + 1, 0, cap)
+            o_full = kernel_ops.decode_attention_paged(
+                q[:, 0], kf, vf, tab, lens_row, layer=i,
+                backend=ctx.kernel_backend)[:, None]
+        else:
+            k_view, gpos = cache_lib.page_view(kf, i, tab)
+            v_view, _ = cache_lib.page_view(vf, i, tab)
+            o_full = attn_lib.decode_attend(q, k_view, v_view, gpos, ctx.pos,
+                                            window=0, merge_axis=None)
         outs.append((0, o_full))
     elif "kv_full" in cache:
         kf, vf = cache["kv_full"]
@@ -227,9 +243,20 @@ def _attn_decode(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
             kf = cache_lib.upd_kv(kf, i, lic, k, sel)
             vf = cache_lib.upd_kv(vf, i, lic, v, sel)
         new_cache["kv_full"] = (kf, vf)
-        gpos = ctx.seq_offset + jnp.arange(Sc)
-        o_full = attn_lib.decode_attend(q, kf[i], vf[i], gpos, ctx.pos,
-                                        window=0, merge_axis=ctx.merge_axis)
+        if ctx.kernel_backend != "ref" and ctx.merge_axis is None:
+            # per-row live lengths; rows outside this shard's range clip
+            # to an empty (zero-output) window, matching the sel mask
+            lens_row = jnp.clip(jnp.broadcast_to(pos_a, (B,)) + 1
+                                - ctx.seq_offset, 0, Sc)
+            o_full = kernel_ops.decode_attention(
+                q[:, 0], kf[i].transpose(0, 2, 1, 3),
+                vf[i].transpose(0, 2, 1, 3), lens_row, window=0,
+                backend=ctx.kernel_backend)[:, None]
+        else:
+            gpos = ctx.seq_offset + jnp.arange(Sc)
+            o_full = attn_lib.decode_attend(q, kf[i], vf[i], gpos, ctx.pos,
+                                            window=0,
+                                            merge_axis=ctx.merge_axis)
         outs.append((0, o_full))
 
     if "kv_win" in cache:
@@ -280,7 +307,8 @@ def _ssd_branch(cfg: ArchConfig, p, xn, ctx: LayerCtx, cache):
         return y, new_cache
     y, stT, tail = ssm_lib.ssd_mix(p, xn, heads=H, d_state=N, d_inner=di,
                                    lens=ctx.lens if ctx.mode == "prefill"
-                                   else None)
+                                   else None,
+                                   kernel_backend=ctx.kernel_backend)
     if ctx.mode == "prefill" and cache is not None:
         i = jnp.asarray(ctx.ssm_i)
         sel = jnp.asarray(ctx.valid)
@@ -306,7 +334,8 @@ def _rwkv_layer(cfg: ArchConfig, p, x, ctx: LayerCtx, cache):
     else:
         y, st2, last1 = ssm_lib.rwkv6_mix(
             p, xx1, heads=H,
-            lens=ctx.lens if ctx.mode == "prefill" else None)
+            lens=ctx.lens if ctx.mode == "prefill" else None,
+            kernel_backend=ctx.kernel_backend)
     x = x + y
     xx2 = rms_norm(x, p["ln2"], eps=cfg.norm_eps)
     if ctx.mode == "decode":

@@ -314,10 +314,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, seq_shards=1,
 # Reference (non-pipelined, single-device) forward — the pipeline oracle
 # ----------------------------------------------------------------------------
 def forward_ref(cfg: ArchConfig, params, tokens_or_embeds, *, mode="train",
-                cache=None, pos=None, labels=None, lens=None):
+                cache=None, pos=None, labels=None, lens=None,
+                kernel_backend="ref"):
     """Plain layer loop. Returns (loss or hidden, cache, aux). `lens` [B]
     marks per-row prompt lengths for variable-length (right-padded)
-    prefill — cache writes stop at each row's length."""
+    prefill — cache writes stop at each row's length. `kernel_backend`
+    ("ref"/"interpret"/"tpu") picks the jnp paths or the Pallas kernels for
+    the attention/SSM mixes."""
     x = embed_tokens(cfg, params, tokens_or_embeds)
     meta = layer_meta(cfg)
     aux_t = jnp.zeros((), jnp.float32)
@@ -335,7 +338,8 @@ def forward_ref(cfg: ArchConfig, params, tokens_or_embeds, *, mode="train",
         ctx = LayerCtx(mode=mode, pos=pos, kind=int(kinds[l]),
                        full_i=int(st_idx * meta["m_full"] + full_i[l]),
                        win_i=int(st_idx * meta["m_win"] + win_i[l]),
-                       ssm_i=l, valid=True, lens=lens)
+                       ssm_i=l, valid=True, lens=lens,
+                       kernel_backend=kernel_backend)
         p_l = jax.tree.map(lambda a: a[l], params["blocks"])
         x, cache, a = apply_layer(cfg, p_l, x, ctx, cache)
         aux_t = aux_t + a

@@ -68,13 +68,17 @@ def _rwkv_head_out(p, y, g, heads):
 
 
 def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None,
-              prev_xx=None, lens=None):
+              prev_xx=None, lens=None, kernel_backend="ref"):
     """Chunked RWKV6 time-mix. xx [B,S,d]. Returns y, final_state, last_xx.
 
     lens [B] (optional): per-row valid prefix for right-padded variable-
     length prompts. Padded positions are made a state no-op (k = 0,
     decay = 1, so S_t = S_{t-1}) and last_xx is the last *real* token per
-    row; y at padded positions is garbage and must not be read."""
+    row; y at padded positions is garbage and must not be read.
+
+    kernel_backend != "ref" routes the inner chunked recurrence through the
+    Pallas rwkv6_chunked kernel (fresh-state prefill/train only — a warm
+    state0 falls back to the jnp scan)."""
     B, S, d = xx.shape
     hd = d // heads
     r, k, v, g, logw = rwkv6_projections(p, xx, prev_xx, heads)
@@ -83,6 +87,16 @@ def rwkv6_mix(p, xx, *, heads: int, chunk: int = 16, state0=None,
         k = jnp.where(live, k, 0.0)
         logw = jnp.where(live, logw, 0.0)
     u = p["u"].astype(jnp.float32)                          # [H, hd]
+    if kernel_backend != "ref" and state0 is None:
+        from repro.kernels import ops as kernel_ops
+        tk = lambda a: a.astype(jnp.float32).transpose(0, 2, 1, 3)
+        y4, stateT = kernel_ops.rwkv6(tk(r), tk(k), tk(v), tk(logw), u,
+                                      backend=kernel_backend)
+        y = y4.transpose(0, 2, 1, 3)                        # [B,S,H,hd]
+        out = _rwkv_head_out(p, y.astype(jnp.float32), g, heads)
+        last = xx[:, -1:] if lens is None else jnp.take_along_axis(
+            xx, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
+        return out.astype(xx.dtype), stateT, last
     if state0 is None:
         state0 = jnp.zeros((B, heads, hd, hd), jnp.float32)
 
@@ -172,14 +186,31 @@ def ssd_projections(p, x, cfg_heads, d_inner, d_state, conv_tail=None,
     return z, xh.reshape(B, S, H, d_inner // H), Bm, Cm, dt, tail
 
 
+def _ssd_out(p, x, y, xh, z, d_inner):
+    """Shared SSD output tail: D-skip, group norm, gating, out projection.
+    y/xh [B,S,H,P]."""
+    B, S = x.shape[:2]
+    y = y.astype(jnp.float32) + \
+        p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z)
+    out = y.astype(p["out_proj"].dtype) @ p["out_proj"]
+    return out.astype(x.dtype)
+
+
 def ssd_mix(p, x, *, heads: int, d_state: int, d_inner: int, chunk: int = 64,
-            state0=None, conv_tail=None, lens=None):
+            state0=None, conv_tail=None, lens=None, kernel_backend="ref"):
     """Chunked SSD. x [B,S,d]. Returns y [B,S,d], final_state, conv_tail.
 
     lens [B] (optional): per-row valid prefix for right-padded variable-
     length prompts. Padded positions are a state no-op (dt = 0, so
     h_t = h_{t-1}) and the returned conv tail holds each row's last three
-    *real* inputs; y at padded positions is garbage and must not be read."""
+    *real* inputs; y at padded positions is garbage and must not be read.
+
+    kernel_backend != "ref" routes the inner chunked recurrence through the
+    Pallas ssd_chunked kernel (fresh-state prefill/train only — a warm
+    state0 falls back to the jnp scan)."""
     B, S, d = x.shape
     H, N, P = heads, d_state, d_inner // heads
     z, xh, Bm, Cm, dt, tail = ssd_projections(p, x, H, d_inner, N, conv_tail,
@@ -190,6 +221,15 @@ def ssd_mix(p, x, *, heads: int, d_state: int, d_inner: int, chunk: int = 64,
         dt = jnp.where((jnp.arange(S)[None, :] < lens[:, None])[..., None],
                        dt, 0.0)
     a = -jnp.exp(p["A_log"].astype(jnp.float32))        # [H], < 0
+    if kernel_backend != "ref" and state0 is None:
+        from repro.kernels import ops as kernel_ops
+        y4, stateT = kernel_ops.ssd(
+            xh.astype(jnp.float32).transpose(0, 2, 1, 3),   # [B,H,S,P]
+            dt.transpose(0, 2, 1),                          # [B,H,S]
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32), a,
+            backend=kernel_backend)
+        y = y4.transpose(0, 2, 1, 3)                        # [B,S,H,P]
+        return _ssd_out(p, x, y, xh, z, d_inner), stateT, tail
     if state0 is None:
         state0 = jnp.zeros((B, H, N, P), jnp.float32)
 
@@ -227,12 +267,7 @@ def ssd_mix(p, x, *, heads: int, d_state: int, d_inner: int, chunk: int = 64,
 
     stateT, yc = jax.lax.scan(chunk_step, state0, (xc, Bc, Cc, dtc))
     y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
-    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
-        xh.astype(jnp.float32)
-    y = y.reshape(B, S, d_inner)
-    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z)
-    out = y.astype(p["out_proj"].dtype) @ p["out_proj"]
-    return out.astype(x.dtype), stateT, tail
+    return _ssd_out(p, x, y, xh, z, d_inner), stateT, tail
 
 
 def ssd_mix_step(p, x, state, conv_tail, *, heads: int, d_state: int,

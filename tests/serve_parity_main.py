@@ -15,12 +15,18 @@ Checks, per architecture family:
      contiguous-degenerate streams bit for bit on both backends;
   5. with ServeSpec.share_prefix, repeated prompts served through
      refcounted shared pages (prefill skipping the matched prefix)
-     reproduce the unshared paged streams bit for bit on both backends.
+     reproduce the unshared paged streams bit for bit on both backends;
+  6. with ServeSpec.kernel_backend="interpret" the Pallas kernels own the
+     hot paths — paged decode walks the KV pool through the block table
+     inside flash_decode_paged (per-row lengths, no gathered view) — and
+     the token streams stay bit-identical to the jnp "ref" oracle, for
+     plain paged, shared-prefix, and (full-attention) fp8 KV pools.
 
 Run: python tests/serve_parity_main.py <arch> <seed>
 """
 import os
 import sys
+from dataclasses import replace as dc_replace
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
@@ -180,6 +186,35 @@ def main(arch_name: str, seed: int) -> int:
     else:
         assert out_ss.prefix_hit_tokens == out_sr.prefix_hit_tokens == 0
     print("shared_prefix_tokens_identical=1")
+
+    # Kernel-backend parity: the same staggered request mix through the
+    # Pallas kernels in interpret mode (threads backend; decode consumes
+    # the paged pool + block table directly inside flash_decode_paged with
+    # per-row lengths). Streams must match the jnp "ref" runs bit for bit.
+    interp = dc_replace(paged, kernel_backend="interpret")
+    out_ki = Scheduler(Engine(ref.replace(serve=interp))).run(list(reqs))
+    for a, b in zip(out_ki.requests, out_pr.requests):
+        assert a.rid == b.rid and a.tokens == b.tokens, (a.rid, a.tokens,
+                                                         b.tokens)
+    out_ks = Scheduler(Engine(ref.replace(
+        serve=dc_replace(shared, kernel_backend="interpret")))).run(
+        [Request(r.rid, r.prompt.copy(), r.max_new_tokens) for r in s_reqs])
+    for a, b in zip(out_ks.requests, out_sr.requests):
+        assert a.rid == b.rid and a.tokens == b.tokens, (a.rid, a.tokens,
+                                                         b.tokens)
+    if cfg.attn_type == "full":
+        # fp8 KV pages quantize both backends identically (the kernel
+        # reads the pool pages as stored, casting in-register)
+        f8 = dc_replace(paged, cache_dtype="f8")
+        out_f8r = Scheduler(Engine(ref.replace(serve=f8))).run(list(reqs))
+        out_f8i = Scheduler(Engine(ref.replace(
+            serve=dc_replace(f8, kernel_backend="interpret")))).run(
+            list(reqs))
+        for a, b in zip(out_f8i.requests, out_f8r.requests):
+            assert a.rid == b.rid and a.tokens == b.tokens, (a.rid,
+                                                             a.tokens,
+                                                             b.tokens)
+    print("kernel_backend_tokens_identical=1")
     return 0
 
 

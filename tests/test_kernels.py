@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 from repro.kernels.mamba_ssd import ssd_chunked
 from repro.kernels.moe_gmm import grouped_matmul
 from repro.kernels.rwkv6_scan import rwkv6_chunked
@@ -36,10 +37,16 @@ def test_flash_attention(B, H, KV, S, hd, window, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("B,H,KV,S,hd", [(2, 4, 2, 128, 32), (1, 6, 6, 64, 16)])
-@pytest.mark.parametrize("length", [1, 37, 64])
-@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (2, 4, 2, 128, 32),           # GQA G=2
+    (1, 6, 6, 64, 16),            # MHA: G == 1, H == KV
+])
+@pytest.mark.parametrize("length", [0, 1, 37, 64])
+@pytest.mark.parametrize("window", [0, 48, 96])
 def test_flash_decode(B, H, KV, S, hd, length, window):
+    """Sweep covers the contract edges: length == 0 (zeros, not a uniform
+    average over uninitialized V) and window >= length (full coverage,
+    window mask inert)."""
     ks = jax.random.split(KEY, 3)
     q1 = jax.random.normal(ks[0], (B, H, hd))
     k = jax.random.normal(ks[1], (B, KV, S, hd))
@@ -47,6 +54,149 @@ def test_flash_decode(B, H, KV, S, hd, length, window):
     ref = kref.decode_ref(q1, k, v, length, window=window)
     out = flash_decode(q1, k, v, length, window=window, block_k=32,
                        interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+    if length == 0:
+        assert np.all(np.asarray(out) == 0.0)
+        assert np.all(np.asarray(ref) == 0.0)
+
+
+def test_flash_decode_zero_length_ignores_uninitialized_v():
+    """length == 0 emits exact zeros even when the unwritten cache holds
+    garbage — the old oracle softmax averaged V uniformly instead."""
+    B, H, KV, S, hd = 2, 4, 2, 32, 16
+    q1 = jax.random.normal(KEY, (B, H, hd))
+    k = jnp.full((B, KV, S, hd), 1e6)
+    v = jnp.full((B, KV, S, hd), -1e6)
+    assert np.all(np.asarray(kref.decode_ref(q1, k, v, 0)) == 0.0)
+    assert np.all(np.asarray(
+        flash_decode(q1, k, v, 0, block_k=16, interpret=True)) == 0.0)
+
+
+def test_flash_decode_per_row_lengths():
+    """A [B] int32 length vector masks each row at its own depth — the
+    serve decode path's mixed-depth batches."""
+    B, H, KV, S, hd = 4, 4, 2, 64, 16
+    ks = jax.random.split(KEY, 3)
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    lens = jnp.asarray([0, 1, 33, 64], jnp.int32)
+    ref = kref.decode_ref(q1, k, v, lens)
+    out = flash_decode(q1, k, v, lens, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+    assert np.all(np.asarray(out[0]) == 0.0)            # length-0 row
+    # each row matches a scalar-length call at its own depth
+    for b, n in enumerate([0, 1, 33, 64]):
+        one = flash_decode(q1[b:b + 1], k[b:b + 1], v[b:b + 1], n,
+                           block_k=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(one[0]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_unaligned_cache_pads_not_degrades(caplog):
+    """A prime cache length no longer silently degrades block_k to 1 —
+    the KV view is padded to a block multiple (dead, masked) and the
+    fallback is logged."""
+    import logging
+    B, H, KV, S, hd = 2, 4, 2, 37, 16
+    ks = jax.random.split(KEY, 3)
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    ref = kref.decode_ref(q1, k, v, 37)
+    with caplog.at_level(logging.WARNING, logger="repro.kernels"):
+        out = flash_decode(q1, k, v, 37, block_k=16, interpret=True)
+    assert any("padding" in r.message for r in caplog.records)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("pool_dtype", [jnp.float32, jnp.float8_e4m3fn])
+def test_flash_decode_paged(pool_dtype):
+    """The paged kernel walks the stacked pool [groups, pages+1, ps, KV,
+    hd] through the block table inside the index map: unmapped (-1)
+    entries route to the trash page, rows mask at their own length, and
+    a length-0 row emits zeros."""
+    L, P1, ps, B, KV, G, hd = 2, 9, 4, 3, 2, 2, 16
+    H = KV * G
+    ks = jax.random.split(KEY, 4)
+    pool_k = jax.random.normal(ks[0], (L, P1, ps, KV, hd)).astype(pool_dtype)
+    pool_v = jax.random.normal(ks[1], (L, P1, ps, KV, hd)).astype(pool_dtype)
+    q1 = jax.random.normal(ks[2], (B, H, hd))
+    tab = jnp.asarray([[0, 3, 6], [1, 4, -1], [-1, -1, -1]], jnp.int32)
+    lens = jnp.asarray([11, 6, 0], jnp.int32)
+    for layer in (0, 1):
+        ref = kref.decode_paged_ref(q1, pool_k, pool_v, tab, lens,
+                                    layer=layer)
+        out = flash_decode_paged(q1, pool_k, pool_v, tab, lens,
+                                 layer=layer, interpret=True)
+        tol = 1e-1 if pool_dtype == jnp.float8_e4m3fn else 2e-5
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=tol, rtol=tol)
+        assert np.all(np.asarray(out[2]) == 0.0)        # empty slot
+
+
+def test_flash_decode_paged_matches_contiguous():
+    """Scattering a contiguous cache across out-of-order pages and reading
+    it back through the block table reproduces the contiguous kernel."""
+    B, KV, G, hd, ps, npg = 2, 2, 2, 16, 4, 4
+    H, S = KV * G, ps * 4
+    ks = jax.random.split(KEY, 3)
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    P1 = B * npg + 1
+    perm = np.random.default_rng(3).permutation(B * npg)
+    tab = jnp.asarray(perm.reshape(B, npg), jnp.int32)
+    pool_k = jnp.zeros((1, P1, ps, KV, hd))
+    pool_v = jnp.zeros((1, P1, ps, KV, hd))
+    for b in range(B):
+        for pi in range(npg):
+            blk_k = k[b, :, pi * ps:(pi + 1) * ps].transpose(1, 0, 2)
+            blk_v = v[b, :, pi * ps:(pi + 1) * ps].transpose(1, 0, 2)
+            pool_k = pool_k.at[0, perm[b * npg + pi]].set(blk_k)
+            pool_v = pool_v.at[0, perm[b * npg + pi]].set(blk_v)
+    lens = jnp.asarray([S, S - 3], jnp.int32)
+    ref = flash_decode(q1, k, v, lens, block_k=ps, interpret=True)
+    out = flash_decode_paged(q1, pool_k, pool_v, tab, lens, layer=0,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_backend_registry():
+    """set_backend validates eagerly (ValueError, not a strippable
+    assert); use_backend scopes and restores the process global."""
+    assert kops.check_backend("ref") == "ref"
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        kops.set_backend("cuda")
+    before = kops.KERNEL_BACKEND
+    with kops.use_backend("interpret"):
+        assert kops.KERNEL_BACKEND == "interpret"
+        with kops.use_backend("ref"):
+            assert kops.KERNEL_BACKEND == "ref"
+        assert kops.KERNEL_BACKEND == "interpret"
+    assert kops.KERNEL_BACKEND == before
+    with pytest.raises(ValueError):
+        with kops.use_backend("mosaic"):
+            pass
+    assert kops.KERNEL_BACKEND == before
+
+
+def test_ops_dispatch_uses_ambient_backend():
+    """ops.decode_attention honors use_backend when no explicit backend
+    is passed, and both routes agree."""
+    B, H, KV, S, hd = 2, 4, 2, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    lens = jnp.asarray([32, 7], jnp.int32)
+    ref = kops.decode_attention(q1, k, v, lens)       # default "ref"
+    with kops.use_backend("interpret"):
+        out = kops.decode_attention(q1, k, v, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
                                rtol=2e-5)
 

@@ -313,3 +313,5 @@ def test_serve_parity_on_pipelined_mesh(arch, seed):
     assert "generate_tokens_identical=1" in r.stdout
     assert "scheduler_tokens_identical=1" in r.stdout
     assert "paged_scheduler_tokens_identical=1" in r.stdout
+    assert "shared_prefix_tokens_identical=1" in r.stdout
+    assert "kernel_backend_tokens_identical=1" in r.stdout
