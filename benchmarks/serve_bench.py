@@ -16,6 +16,10 @@ point, the file is a trajectory anchor per the ROADMAP):
     unshared admission needs — prefix sharing (repro.serve.memory) must
     admit the batch without blocking, peak strictly fewer distinct
     pages, and emit bit-identical streams (CI asserts all three)
+  - cluster: one big + two whimpy replicas behind the topology-priced
+    Router (repro.serve.router) vs the best single replica on the same
+    mixed workload — CI enforces a >= 1.3x throughput floor and
+    prefix_hit_tokens > 0 on pool-bearing families
 
   PYTHONPATH=src python benchmarks/serve_bench.py           # full sweep
   PYTHONPATH=src python benchmarks/serve_bench.py --tiny    # CI smoke
@@ -134,6 +138,84 @@ def bench_arch(name: str, *, prompt_len: int, gen: int, max_batch: int,
         "preemptions": s_out.preemptions,
     }
 
+    # scale-out cluster: one big + two whimpy replicas behind the Router
+    # (repro.serve.router), priced with the 'hetero' topology, vs the best
+    # single replica (the big one alone) on the same mixed workload — a
+    # quarter of the requests share one full prompt so affinity has a
+    # prefix to pin (prefix_hit_tokens stays 0 for pool-less families)
+    from repro.api import PartitionSpec, ReplicaSpec
+    from repro.serve.router import Router
+    whimpy = max(1, max_batch // 2)
+    csv_kw = dict(prompt_len=prompt_len, gen=gen, max_batch=max_batch,
+                  page_size=max(1, prompt_len // 2), share_prefix=True,
+                  evict=True)
+    common = rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
+    cases = []
+    for i in range(2 * n_req):
+        if i % 4 == 0:
+            p = common.copy()
+        else:
+            p = rng.integers(0, cfg.vocab_size,
+                             int(rng.integers(2, prompt_len + 1)),
+                             dtype=np.int32)
+        cases.append((p, 1 + (i % gen)))
+    mk_cases = lambda: [Request(rid=i, prompt=p.copy(), max_new_tokens=m)
+                        for i, (p, m) in enumerate(cases)]
+    want_toks = sum(m for _, m in cases)
+
+    router = Router(plan.replace(
+        serve=ServeSpec(replicas=(ReplicaSpec(max_batch=max_batch),
+                                  ReplicaSpec(max_batch=whimpy),
+                                  ReplicaSpec(max_batch=whimpy)),
+                        **csv_kw),
+        partition__data=3, cluster__topology="hetero"))
+    warm = router.run(mk_cases())       # compile + per-run router counters
+    assert warm.tokens_out == want_toks and warm.failed_requests == 0
+    if warm.pages_total:
+        assert warm.prefix_hit_tokens > 0
+        assert warm.router["affinity_hits"] > 0
+    # fleet timing is *modeled*: each replica rides its own node in the
+    # deployment the cluster Plan describes, so fleet wall is the busiest
+    # replica's wall (router reports modeled_fleet_wall_s); the single
+    # bench host serializes the replica threads, and that measured host
+    # wall rides along under host_wall_s for honesty
+    c_host = c_fleet = None
+    for _ in range(3):
+        t0 = time.monotonic()
+        c_out = router.run(mk_cases())
+        dt = time.monotonic() - t0
+        c_host = dt if c_host is None else min(c_host, dt)
+        fw = c_out.router["modeled_fleet_wall_s"]
+        c_fleet = fw if c_fleet is None else min(c_fleet, fw)
+    single = Engine(plan.replace(serve=ServeSpec(**csv_kw)))
+    sched = lambda: Scheduler(single).run(mk_cases())
+    sref = sched()                       # warm
+    assert sref.tokens_out == want_toks
+    u_s = None
+    for _ in range(3):
+        t0 = time.monotonic()
+        sched()
+        dt = time.monotonic() - t0
+        u_s = dt if u_s is None else min(u_s, dt)
+    cluster_cell = {
+        "replicas": [max_batch, whimpy, whimpy],
+        "topology": "hetero",
+        "requests": 2 * n_req,
+        "tokens": c_out.tokens_out,
+        "fleet_wall_s": c_fleet,
+        "host_wall_s": c_host,
+        "tokens_per_s": want_toks / c_fleet,
+        "best_single": {"max_batch": max_batch, "wall_s": u_s,
+                        "tokens_per_s": want_toks / u_s},
+        "speedup_vs_best_single": u_s / c_fleet,
+        "prefix_hit_tokens": warm.prefix_hit_tokens,
+        "affinity_hits": warm.router["affinity_hits"],
+        "dispatches": warm.router["dispatches"],
+        "has_pool": bool(warm.pages_total),
+        "note": "fleet wall = busiest replica (replicas model separate "
+                "nodes); host_wall_s is the serialized bench-host wall",
+    }
+
     # one *untimed* traced pass: the telemetry block (TTFT distribution,
     # admission-group accounting) never has tracing on during the timed
     # batched/sequential cells the CI speedup floor reads
@@ -171,6 +253,7 @@ def bench_arch(name: str, *, prompt_len: int, gen: int, max_batch: int,
         "paged_mixed_budgets": {"tokens": p_out.tokens_out,
                                 "pages": page_cols(p_out)},
         "shared_prefix": shared_cell,
+        "cluster": cluster_cell,
         "telemetry": telemetry,
     }
 
@@ -210,6 +293,13 @@ def main(argv=None):
               f"hit={sh['prefix_hit_tokens']} tok "
               f"blocked {sh['unshared']['admit_blocked']} -> "
               f"{sh['shared']['admit_blocked']}")
+        cl = cell["cluster"]
+        print(f"  cluster {cl['replicas']}: "
+              f"{cl['tokens_per_s']:.1f}tok/s vs best single "
+              f"{cl['best_single']['tokens_per_s']:.1f}tok/s "
+              f"({cl['speedup_vs_best_single']:.2f}x), "
+              f"affinity_hits={cl['affinity_hits']} "
+              f"prefix_hit={cl['prefix_hit_tokens']} tok")
     with open(a.out, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {a.out}")

@@ -32,22 +32,23 @@ heartbeat-driven eviction + elastic rejoin, and graceful serve-side
 degradation as the recovery surface (see repro.faults).
 """
 from repro.api.engine import Engine
-from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
-                            ServeSpec)
+from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, ReplicaSpec,
+                            RunSpec, ServeSpec)
 from repro.api.presets import PRESETS, get_preset, list_presets
 from repro.api.report import (RequestStats, ServeReport, Telemetry,
                               TrainReport)
 from repro.api.sync import ASP, BSP, SyncPolicy, UNBOUNDED_D, WSP
 from repro.faults import (DegradedRunError, FaultPlan, FaultPolicy,
                           GateTimeout, LinkFault, PSStall, PushTimeout,
-                          SlotFault, TransportError, WorkerCrash,
-                          WorkerSlowdown)
+                          ReplicaDown, SlotFault, TransportError,
+                          WorkerCrash, WorkerSlowdown)
 
 __all__ = [
     "ASP", "BSP", "ClusterSpec", "DegradedRunError", "Engine", "FaultPlan",
     "FaultPolicy", "GateTimeout", "LinkFault", "PSStall", "PartitionSpec",
-    "Plan", "PRESETS", "PushTimeout", "RequestStats", "RunSpec",
-    "ServeReport", "ServeSpec", "SlotFault", "SyncPolicy", "Telemetry",
-    "TrainReport", "TransportError", "UNBOUNDED_D", "WSP", "WorkerCrash",
-    "WorkerSlowdown", "get_preset", "list_presets",
+    "Plan", "PRESETS", "PushTimeout", "ReplicaDown", "ReplicaSpec",
+    "RequestStats", "RunSpec", "ServeReport", "ServeSpec", "SlotFault",
+    "SyncPolicy", "Telemetry", "TrainReport", "TransportError",
+    "UNBOUNDED_D", "WSP", "WorkerCrash", "WorkerSlowdown", "get_preset",
+    "list_presets",
 ]

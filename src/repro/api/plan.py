@@ -22,8 +22,8 @@ from typing import Any, Optional
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.api.sync import BSP, SyncPolicy, WSP
 from repro.faults.plan import (FaultPlan, FaultPolicy, SERVE_EVENTS,
-                               TRAIN_EVENTS, LinkFault, PSStall, SlotFault,
-                               WorkerCrash, WorkerSlowdown)
+                               TRAIN_EVENTS, LinkFault, PSStall, ReplicaDown,
+                               SlotFault, WorkerCrash, WorkerSlowdown)
 
 
 @dataclass(frozen=True)
@@ -93,6 +93,23 @@ class RunSpec:
 
 
 @dataclass(frozen=True)
+class ReplicaSpec:
+    """One replica's sizing in a data-parallel serve fleet
+    (`partition.data` > 1, routed by `repro.serve.router.Router`).
+
+    Zeros defer to the cluster-level ServeSpec, whose `max_batch` /
+    `max_pages` are the per-replica *ceiling*: a whimpy replica shrinks
+    them (fewer decode slots, a smaller KV page pool) and the Router
+    steers short-prompt / short-deadline traffic its way. `host` names
+    the replica's endpoint in `cluster.topology` (default "vw{i}") so
+    dispatch can price the client->replica link."""
+
+    max_batch: int = 0          # decode slots; 0 -> ServeSpec.max_batch
+    max_pages: int = 0          # KV page pool; 0 -> ServeSpec.max_pages
+    host: str = ""              # topology endpoint; "" -> "vw{index}"
+
+
+@dataclass(frozen=True)
 class ServeSpec:
     """Frozen serving shapes and sampling for a serve-mode Plan.
 
@@ -134,6 +151,13 @@ class ServeSpec:
     preempt: bool = False           # preempt + replay instead of refusing
     kernel_backend: str = "ref"     # "ref" jnp paths | "interpret"/"tpu"
                                     # Pallas kernels on the serve hot paths
+    replicas: tuple = ()            # per-replica ReplicaSpec overrides for a
+                                    # data-parallel serve fleet; () with
+                                    # partition.data=N -> N homogeneous
+                                    # replicas at the cluster-level sizing
+
+    def __post_init__(self):
+        object.__setattr__(self, "replicas", tuple(self.replicas))
 
     @property
     def max_len(self) -> int:
@@ -249,12 +273,14 @@ class Plan:
                     f"num_microbatches {nm} (the wave packs the batch into "
                     f"Nm pipeline minibatches)")
 
-        if run.backend == "threads" and (p.stages or p.tp or p.data != 1):
+        if run.backend == "threads" and \
+                (p.stages or p.tp or (p.data != 1 and self.serve is None)):
             raise ValueError(
                 "PartitionSpec.stages/tp/data factor the spmd mesh; the "
                 "threads backend runs each VW's wave step whole (only "
-                "partition.num_microbatches applies) — unset them or use "
-                "backend='spmd'")
+                "partition.num_microbatches applies; on a serve Plan "
+                "partition.data counts Router replicas) — unset them or "
+                "use backend='spmd'")
         if run.backend == "spmd":
             if self.arch is None:
                 raise ValueError("the spmd backend builds the pipelined wave "
@@ -340,13 +366,26 @@ class Plan:
                     raise ValueError(
                         f"SlotFault names slot {ev.slot} outside the decode "
                         f"batch (max_batch={self.serve.max_batch})")
+            replicas = max(1, self.partition.data)
+            for ev in self.faults.of_type(ReplicaDown):
+                if replicas == 1:
+                    raise ValueError(
+                        "ReplicaDown kills one replica of a data-parallel "
+                        "serve fleet; this Plan has a single replica "
+                        "(partition.data=1) — the Router would have no "
+                        "survivor to re-dispatch onto")
+                if ev.replica >= replicas:
+                    raise ValueError(
+                        f"ReplicaDown names replica {ev.replica} outside "
+                        f"the fleet (partition.data={replicas}); that fault "
+                        f"would silently never be injected")
             return
         bad = self.faults.of_type(*SERVE_EVENTS)
         if bad:
             raise ValueError(
-                "SlotFault is a serving fault; this Plan trains — use the "
-                "training events (LinkFault/WorkerCrash/WorkerSlowdown/"
-                "PSStall) or set Plan.serve")
+                f"{type(bad[0]).__name__} is a serving fault; this Plan "
+                f"trains — use the training events (LinkFault/WorkerCrash/"
+                f"WorkerSlowdown/PSStall) or set Plan.serve")
         if run.backend != "threads" or isinstance(self.sync, BSP):
             raise ValueError(
                 "fault injection seams live in the threaded parameter-"
@@ -439,18 +478,60 @@ class Plan:
                 "codec/compression_ratio (use serve.cache_dtype='f8' to "
                 "shrink the cache)")
         if cl.num_vw != 1 or cl.speeds is not None \
-                or cl.straggle_fns is not None or cl.fail_at \
-                or cl.topology is not None:
+                or cl.straggle_fns is not None or cl.fail_at:
             raise ValueError(
                 "ClusterSpec heterogeneity knobs (num_vw/speeds/"
-                "straggle_fns/fail_at/topology) drive the threaded "
-                "training fleet; the serve path batches requests on one "
-                "host or mesh — unset them")
-        if run.backend == "spmd" and self.partition.data != 1:
+                "straggle_fns/fail_at) drive the threaded training fleet; "
+                "the serve path batches requests on replicas sized by "
+                "partition.data + ServeSpec.replicas, and cluster.topology "
+                "alone prices the Router's dispatch — unset the rest")
+        p = self.partition
+        if run.backend == "spmd":
+            if p.data != 1 or sv.replicas:
+                raise ValueError(
+                    "spmd serve batches live whole on the model (stage x "
+                    "tp) mesh; data-parallel serve replicas are threads-"
+                    "backend only for now — set partition.data=1 (and drop "
+                    "ServeSpec.replicas) or use backend='threads'")
+            if cl.topology is not None:
+                raise ValueError(
+                    "cluster.topology prices the Router's dispatch over "
+                    "threads-backend serve replicas; the spmd mesh is a "
+                    "single replica — unset it")
+            return
+        if p.data < 1:
             raise ValueError(
-                "serve batches live whole on the model (stage x tp) mesh; "
-                "data-parallel serve replicas are not wired yet — set "
-                "partition.data=1")
+                f"partition.data counts the Router's serve replicas and "
+                f"must be >= 1, got {p.data}")
+        if isinstance(cl.topology, str):
+            from repro.dist.topology import make_topology
+            make_topology(cl.topology, max(1, p.data))  # parse errors now
+        if sv.replicas:
+            if len(sv.replicas) != p.data:
+                raise ValueError(
+                    f"ServeSpec.replicas carries {len(sv.replicas)} replica "
+                    f"specs for partition.data={p.data} replicas; give one "
+                    f"spec per replica (or none for a homogeneous fleet)")
+            for i, r in enumerate(sv.replicas):
+                if not isinstance(r, ReplicaSpec):
+                    raise TypeError(f"ServeSpec.replicas[{i}] must be a "
+                                    f"ReplicaSpec, got {r!r}")
+                mb = r.max_batch or sv.max_batch
+                mp = r.max_pages or sv.max_pages
+                if not 1 <= mb <= sv.max_batch:
+                    raise ValueError(
+                        f"replica {i}: max_batch={mb} outside [1, "
+                        f"ServeSpec.max_batch={sv.max_batch}] — the "
+                        f"cluster-level spec is the per-replica ceiling "
+                        f"(whimpy replicas shrink it, never exceed it)")
+                if mp and sv.max_pages and mp > sv.max_pages:
+                    raise ValueError(
+                        f"replica {i}: max_pages={mp} exceeds the cluster-"
+                        f"level ceiling ServeSpec.max_pages={sv.max_pages}")
+                # a replica pool that cannot hold one worst-case request
+                # could never admit anything — surface it here, not mid-run
+                make_layout(mb, sv.max_len, page_size=sv.page_size,
+                            max_pages=mp)
 
     # ---- ergonomics -----------------------------------------------------
     def replace(self, **kw) -> "Plan":
@@ -473,8 +554,10 @@ class Plan:
         arch = self.arch.name if self.arch else "<injected wave step>"
         if self.serve is not None:
             sv = self.serve
+            reps = (f"replicas={self.partition.data}, "
+                    if self.partition.data > 1 else "")
             return (f"Plan({arch}, serve, backend={self.run.backend}, "
-                    f"batch={sv.max_batch}, prompt={sv.prompt_len}, "
+                    f"{reps}batch={sv.max_batch}, prompt={sv.prompt_len}, "
                     f"gen={sv.gen}, "
                     f"{'greedy' if sv.temperature == 0 else 'sampled'})")
         topo = self.cluster.topology

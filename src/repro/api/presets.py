@@ -16,8 +16,8 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.api.engine import Engine
-from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, RunSpec,
-                            ServeSpec)
+from repro.api.plan import (ClusterSpec, PartitionSpec, Plan, ReplicaSpec,
+                            RunSpec, ServeSpec)
 from repro.api.sync import BSP, WSP
 
 PRESETS: dict[str, Callable[[], Plan]] = {}
@@ -163,6 +163,23 @@ def serve_shared() -> Plan:
                                 preempt=True))
 
 
+@preset("serve_cluster")
+def serve_cluster() -> Plan:
+    """Scale-out serving, HetPipe-style: one big + two whimpy replicas
+    behind the topology-priced Router (repro.serve.router). Requests
+    sharing a page-aligned prefix stick to one replica's prefix index;
+    everything else spreads by load priced with the 'hetero' topology's
+    alpha-beta link costs."""
+    return Plan(arch=_tiny_arch(),
+                partition=PartitionSpec(data=3),
+                cluster=ClusterSpec(topology="hetero"),
+                serve=ServeSpec(prompt_len=8, gen=8, max_batch=4,
+                                page_size=4, share_prefix=True,
+                                replicas=(ReplicaSpec(max_batch=4),
+                                          ReplicaSpec(max_batch=2),
+                                          ReplicaSpec(max_batch=2))))
+
+
 def main(argv=None):
     import argparse
 
@@ -182,6 +199,38 @@ def main(argv=None):
     plan = get_preset(a.run, **({"run__max_waves": a.waves} if a.waves
                                 else {}))
     print(plan.describe())
+    if plan.serve is not None and plan.partition.data > 1:
+        # cluster presets demo the Router: shared-prefix traffic sticks
+        # to one replica's prefix index, the rest spreads by load
+        from repro.api.serving import Request
+        from repro.serve.router import Router
+        sv = plan.serve
+        rng = np.random.default_rng(0)
+        common = rng.integers(0, plan.arch.vocab_size, sv.prompt_len,
+                              dtype=np.int32)
+        reqs = [Request(rid=i, prompt=common.copy(),
+                        max_new_tokens=max(1, sv.gen // 2))
+                for i in range(4)]
+        reqs += [Request(rid=4 + i,
+                         prompt=rng.integers(
+                             0, plan.arch.vocab_size,
+                             int(rng.integers(2, sv.prompt_len + 1)),
+                             dtype=np.int32),
+                         max_new_tokens=int(rng.integers(1, sv.gen + 1)))
+                 for i in range(8)]
+        rep = Router(plan).run(reqs)
+        assert rep.tokens_out == sum(r.max_new_tokens for r in reqs)
+        assert rep.failed_requests == 0, rep.failed_requests
+        assert rep.router["affinity_hits"] > 0, rep.router
+        assert rep.prefix_hit_tokens > 0, rep.prefix_hit_tokens
+        print(f"replicas={rep.router['replicas']} requests={len(reqs)} "
+              f"tokens={rep.tokens_out} "
+              f"dispatches={rep.router['dispatches']} "
+              f"affinity_hits={rep.router['affinity_hits']} "
+              f"prefix_hit={rep.prefix_hit_tokens} tok "
+              f"throughput={rep.tokens_per_s():.1f} tok/s")
+        print("OK")
+        return 0
     if plan.serve is not None:
         sv = plan.serve
         if sv.page_size:

@@ -201,7 +201,20 @@ class ServeReport:
     quarantined: int = 0        # slots removed from the free pool
     shed: int = 0               # requests refused under fault pressure
     failed_requests: int = 0    # retired incomplete (retry budget spent)
+    aborted_step: int = -1      # serving stopped early at this decode step
+    #                             (StopServing — e.g. a replica died); -1 =
+    #                             ran to completion
     telemetry: Optional[Telemetry] = None  # when tracing is enabled
+    # cluster serving (repro.serve.router): merge() fills these on the
+    # Router's merged report; empty on single-replica runs
+    replicas: list = field(default_factory=list)  # per-replica sub-reports
+    #                             (one per replica *run* — a survivor that
+    #                             absorbed a re-dispatch round contributes
+    #                             one sub-report per round)
+    router: dict = field(default_factory=dict)    # Router counters:
+    #                             dispatches per policy, affinity_hits,
+    #                             rebalances, queue_depth_peak, rounds,
+    #                             replica_downs
 
     @property
     def tokens_out(self) -> int:
@@ -220,7 +233,17 @@ class ServeReport:
 
     def occupancy(self) -> Optional[float]:
         """Mean fraction of decode-batch slots doing useful work (scheduler
-        runs only; None for aligned-batch generate())."""
+        runs only; None for aligned-batch generate()). On a merged report
+        each replica's slot-steps are weighed against *its own* capacity
+        (decode_steps_i * max_batch_i): the merged max_batch is the fleet's
+        total slots, but replicas step independently, so the naive
+        slot_steps / (decode_steps * max_batch) would divide every
+        replica's work by every other replica's steps."""
+        if self.replicas:
+            cap = sum(r.decode_steps * r.max_batch for r in self.replicas)
+            if not cap:
+                return None
+            return sum(r.slot_steps for r in self.replicas) / cap
         if not self.decode_steps or not self.max_batch or not self.requests:
             return None
         return self.slot_steps / (self.decode_steps * self.max_batch)
@@ -241,7 +264,72 @@ class ServeReport:
         into N block tables is one page of HBM — summing per-slot
         block-table lengths would double-count exactly the pages
         sharing saves, and the pool-sizing question this answers is the
-        peak physical footprint, not a time-averaged occupancy."""
+        peak physical footprint, not a time-averaged occupancy.
+
+        On a merged report the fraction is pool-weighted — each pool-
+        bearing replica's peak over the fleet's summed pools (pool-less
+        families contribute nothing to either side), which degenerates
+        to the plain ratio for a single replica."""
+        if self.replicas:
+            tot = sum(r.pages_total for r in self.replicas
+                      if r.pages_total and r.decode_steps)
+            if not tot:
+                return None
+            return sum(r.peak_pages for r in self.replicas
+                       if r.pages_total and r.decode_steps) / tot
         if not self.decode_steps or not self.pages_total:
             return None
         return self.peak_pages / self.pages_total
+
+    @classmethod
+    def merge(cls, reports, *, router: Optional[dict] = None,
+              wall_s: Optional[float] = None) -> "ServeReport":
+        """Fold per-replica sub-reports into one fleet-level ServeReport.
+
+        Additive counters (tokens, prefill/decode time and calls,
+        slot-steps, page and memory/fault accounting) sum; `max_batch` and
+        `pages_total` sum into the fleet's total capacity; `requests`
+        concatenates sorted by rid (the Router never splits or duplicates
+        a request, so rids stay unique). `wall_s` defaults to the max over
+        sub-reports — replicas run concurrently, so summing their walls
+        would undercount throughput by the overlap — and the Router
+        passes its own measured wall instead. decode_s/prefill_s DO sum:
+        they are cumulative compute-seconds across the fleet, and may
+        legitimately exceed wall_s. `occupancy()` and
+        `page_utilization()` are replica-weighted (see their docstrings);
+        both degenerate to the plain single-replica values for a one-
+        element merge."""
+        reports = list(reports)
+        if not reports:
+            raise ValueError("merge() needs at least one sub-report")
+        out = cls(arch=reports[0].arch, backend=reports[0].backend,
+                  replicas=reports, router=dict(router or {}))
+        for r in reports:
+            out.requests.extend(r.requests)
+            out.prefill_s += r.prefill_s
+            out.prefill_calls += r.prefill_calls
+            out.decode_s += r.decode_s
+            out.decode_steps += r.decode_steps
+            out.slot_steps += r.slot_steps
+            out.max_batch += r.max_batch
+            out.pages_total += r.pages_total
+            out.peak_pages += r.peak_pages
+            out.page_steps += r.page_steps
+            out.admit_blocked += r.admit_blocked
+            out.prefix_hit_tokens += r.prefix_hit_tokens
+            out.pages_shared += r.pages_shared
+            out.cow_copies += r.cow_copies
+            out.evictions += r.evictions
+            out.readmit_recomputes += r.readmit_recomputes
+            out.preemptions += r.preemptions
+            out.slot_faults += r.slot_faults
+            out.requeues += r.requeues
+            out.reprefills += r.reprefills
+            out.quarantined += r.quarantined
+            out.shed += r.shed
+            out.failed_requests += r.failed_requests
+            out.page_size = out.page_size or r.page_size
+        out.wall_s = wall_s if wall_s is not None else \
+            max(r.wall_s for r in reports)
+        out.requests.sort(key=lambda r: r.rid)
+        return out

@@ -58,6 +58,15 @@ from repro.serve.memory import MemoryManager
 POLICIES = ("fifo", "deadline")
 
 
+class StopServing(Exception):
+    """Raised by a run() callback to abort serving mid-run — the Router's
+    replica-down injection. The Scheduler stops immediately and returns a
+    report covering only the requests already retired (aborted_step marks
+    where); in-flight and queued requests are simply absent, so the caller
+    can re-dispatch them (replay from the prompt is bit-identity-safe:
+    token picks are keyed by (sample_seed, rid, k))."""
+
+
 @dataclass
 class Request:
     """One serving request: a prompt of at most serve.prompt_len token
@@ -131,9 +140,14 @@ class Scheduler:
                 else float("inf")
         return sorted(range(len(queue)), key=lambda i: slack(queue[i]))
 
-    def run(self, requests, *, callback=None) -> ServeReport:
+    def run(self, requests, *, callback=None, store=None,
+            mm=None) -> ServeReport:
         """Serve `requests` to completion. `callback(step, active_slots)`
-        fires after every batched decode step."""
+        fires after every batched decode step (raise StopServing from it
+        to abort). `store`/`mm` inject a persistent CacheStore +
+        MemoryManager (the Router's replicas keep theirs warm across
+        dispatch rounds, so a re-dispatched shared prefix still hits the
+        index); by default both are created fresh for this run."""
         eng, sv = self.engine, self.sv
         B, P = sv.max_batch, sv.prompt_len
         plan = eng.plan
@@ -156,7 +170,15 @@ class Scheduler:
             if r.deadline < 0:
                 raise ValueError(f"request {r.rid}: deadline must be >= 0 "
                                  f"(0 = none), got {r.deadline}")
-        store = eng.serve_store()
+        if (store is None) != (mm is None):
+            raise ValueError("store and mm persist together: inject both "
+                             "(the mm indexes that store's pages) or "
+                             "neither")
+        if store is None:
+            store = eng.serve_store()
+        elif mm.store is not store:
+            raise ValueError("the injected MemoryManager indexes a "
+                             "different CacheStore than the one passed")
         report = ServeReport(arch=plan.arch.name, backend=plan.run.backend,
                              max_batch=B, page_size=store.layout.page_size,
                              pages_total=store.pages_total)
@@ -169,9 +191,14 @@ class Scheduler:
         fpol = plan.fault_policy
         quarantined: set[int] = set()
         retries_by_rid: dict[int, int] = {}
-        mm = MemoryManager(store, share_prefix=sv.share_prefix,
-                           evict=sv.evict, preempt=sv.preempt,
-                           policy=self.policy, metrics=tr.metrics)
+        if mm is None:
+            mm = MemoryManager(store, share_prefix=sv.share_prefix,
+                               evict=sv.evict, preempt=sv.preempt,
+                               policy=self.policy, metrics=tr.metrics)
+        # a persistent store/mm carries counters from earlier runs; report
+        # this run's contribution as deltas from these baselines
+        base = (mm.prefix_hit_tokens, mm.pages_shared, mm.evictions,
+                mm.readmit_recomputes, store.cow_copies)
         preempted_rids: set[int] = set()
 
         def retire(s: int, slot: _Slot):
@@ -446,14 +473,22 @@ class Scheduler:
                     del active[s]
                     retire(s, slot)
             if callback is not None:
-                callback(step, len(active))
+                try:
+                    callback(step, len(active))
+                except StopServing:
+                    # abort: the replica died — report only what retired;
+                    # the Router replays the rest on the survivors
+                    report.aborted_step = step
+                    tr.instant("sched", "aborted", step=step,
+                               in_flight=len(active), queued=len(queue))
+                    break
         report.wall_s = time.monotonic() - t_start
         report.peak_pages = store.peak_pages
-        report.prefix_hit_tokens = mm.prefix_hit_tokens
-        report.pages_shared = mm.pages_shared
-        report.cow_copies = store.cow_copies
-        report.evictions = mm.evictions
-        report.readmit_recomputes = mm.readmit_recomputes
+        report.prefix_hit_tokens = mm.prefix_hit_tokens - base[0]
+        report.pages_shared = mm.pages_shared - base[1]
+        report.cow_copies = store.cow_copies - base[4]
+        report.evictions = mm.evictions - base[2]
+        report.readmit_recomputes = mm.readmit_recomputes - base[3]
         if mm.share_prefix and mm.prompt_tokens:
             tr.metrics.gauge_set("serve/prefix_hit_rate",
                                  mm.prefix_hit_tokens / mm.prompt_tokens)

@@ -25,12 +25,13 @@ from repro.faults.errors import (DegradedRunError, FaultError, GateTimeout,
                                  PushTimeout, TransportError)
 from repro.faults.injector import FaultInjector
 from repro.faults.plan import (FaultPlan, FaultPolicy, LinkFault, PSStall,
-                               SlotFault, WorkerCrash, WorkerSlowdown)
+                               ReplicaDown, SlotFault, WorkerCrash,
+                               WorkerSlowdown)
 from repro.faults.supervisor import Eviction, FleetSupervisor
 
 __all__ = [
     "DegradedRunError", "Eviction", "FaultError", "FaultInjector",
     "FaultPlan", "FaultPolicy", "FleetSupervisor", "GateTimeout",
-    "LinkFault", "PSStall", "PushTimeout", "SlotFault", "TransportError",
-    "WorkerCrash", "WorkerSlowdown",
+    "LinkFault", "PSStall", "PushTimeout", "ReplicaDown", "SlotFault",
+    "TransportError", "WorkerCrash", "WorkerSlowdown",
 ]

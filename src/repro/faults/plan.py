@@ -25,6 +25,11 @@ Events:
   SlotFault       serving: the decode-batch slot `slot` faults at decode
                   step `step` (its transient per-slot state is lost; the
                   Scheduler quarantines the slot and recovers the request).
+  ReplicaDown     serving: replica `replica` of a data-parallel serve
+                  fleet (partition.data > 1) dies at *its own* decode step
+                  `step`; the Router re-dispatches its unfinished requests
+                  onto the survivors (requeue semantics — replay from the
+                  prompt, bit-identical streams).
 
 `FaultPolicy` holds the recovery knobs: transport retry/backoff budgets,
 heartbeat-driven eviction and rejoin of workers, degraded-completion
@@ -113,8 +118,19 @@ class SlotFault:
                              f"step={self.step}) must be non-negative")
 
 
+@dataclass(frozen=True)
+class ReplicaDown:
+    replica: int                # Router replica index (partition.data)
+    step: int                   # the replica's own decode step
+
+    def validate(self) -> None:
+        if self.replica < 0 or self.step < 0:
+            raise ValueError(f"ReplicaDown(replica={self.replica}, "
+                             f"step={self.step}) must be non-negative")
+
+
 TRAIN_EVENTS = (LinkFault, WorkerCrash, WorkerSlowdown, PSStall)
-SERVE_EVENTS = (SlotFault,)
+SERVE_EVENTS = (SlotFault, ReplicaDown)
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +203,16 @@ class FaultPlan:
                                  step=int(rng.integers(1, 5)) + 3 * i)
                        for i in range(n_faults))
         return FaultPlan(seed=seed, events=events)
+
+    @staticmethod
+    def sample_cluster(seed: int, *, replicas: int) -> "FaultPlan":
+        """A deterministic random cluster chaos scenario: one replica of a
+        data-parallel serve fleet dies early in its decode loop, forcing
+        the Router to re-dispatch its unfinished requests."""
+        rng = np.random.default_rng(seed)
+        return FaultPlan(seed=seed, events=(
+            ReplicaDown(replica=int(rng.integers(0, replicas)),
+                        step=int(rng.integers(1, 4))),))
 
 
 # ---------------------------------------------------------------------------

@@ -73,6 +73,23 @@ def build_parser() -> argparse.ArgumentParser:
                          "queue by slack, FIFO among ties; the synthetic "
                          "requests get staggered deadlines so the order "
                          "actually differs from FIFO)")
+    ap.add_argument("--replicas", default=None, metavar="B0,B1,...",
+                    help="scale-out serving: comma-separated per-replica "
+                         "decode batch sizes (e.g. '4,2,2' = one big + two "
+                         "whimpy). Requests route through the Router "
+                         "(repro.serve.router) instead of one Scheduler; "
+                         "needs --requests, threads backend only")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="price the Router's dispatch with this cluster "
+                         "topology's alpha-beta link costs (dist.topology "
+                         "spec, e.g. 'hetero', '3node:eth1'); default: all "
+                         "replicas equidistant")
+    ap.add_argument("--route", choices=("least_loaded", "deadline"),
+                    default="least_loaded",
+                    help="Router dispatch policy: least_loaded books by "
+                         "queue depth + page pressure + link cost; "
+                         "deadline dispatches in slack order (and runs "
+                         "each replica's scheduler in deadline mode)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome-trace-event JSON (Perfetto-"
                          "loadable) of the run, with the metrics snapshot "
@@ -114,29 +131,99 @@ def main(argv=None):
             "the aligned generate() path keeps the contiguous reference "
             "cache and would silently drop them — add --requests N")
 
+    replica_batches = []
+    if a.replicas:
+        if not a.requests:
+            raise SystemExit("--replicas routes requests over a replica "
+                             "fleet; add --requests N")
+        if a.backend != "threads":
+            raise SystemExit("--replicas is threads-backend only (the "
+                             "spmd mesh serves as a single replica)")
+        replica_batches = [int(x) for x in a.replicas.split(",")]
+
     partition = PartitionSpec()
     if a.backend == "spmd":
         dsz, ssz, tsz = (int(x) for x in a.mesh.split(","))
         partition = PartitionSpec(data=dsz, stages=ssz, tp=tsz)
+    elif replica_batches:
+        partition = PartitionSpec(data=len(replica_batches))
     fault_kwargs = {}
     if a.chaos is not None:
         from repro.api import FaultPlan
-        faults = FaultPlan.sample_serve(a.chaos, max_batch=a.batch)
+        if replica_batches:
+            faults = FaultPlan.sample_cluster(a.chaos,
+                                              replicas=len(replica_batches))
+        else:
+            faults = FaultPlan.sample_serve(a.chaos, max_batch=a.batch)
         fault_kwargs = dict(faults=faults)
         print(f"chaos: {faults.describe()}")
+    cluster_kwargs = {}
+    if a.topology:
+        from repro.api import ClusterSpec
+        cluster_kwargs = dict(cluster=ClusterSpec(topology=a.topology))
+    replica_kwargs = {}
+    if replica_batches:
+        from repro.api import ReplicaSpec
+        replica_kwargs = dict(replicas=tuple(
+            ReplicaSpec(max_batch=b) for b in replica_batches))
     plan = Plan(arch=cfg, partition=partition,
                 serve=ServeSpec(prompt_len=a.prompt_len, gen=a.gen,
-                                max_batch=a.batch,
+                                max_batch=max(replica_batches + [a.batch]),
                                 temperature=a.temperature,
                                 page_size=a.page_size,
                                 max_pages=a.max_pages,
                                 share_prefix=a.share_prefix,
                                 evict=a.evict, preempt=a.preempt,
-                                kernel_backend=a.kernel_backend),
+                                kernel_backend=a.kernel_backend,
+                                **replica_kwargs),
                 run=RunSpec(backend=a.backend),
-                **fault_kwargs)
+                **cluster_kwargs, **fault_kwargs)
     from repro.obs import NULL_TRACER, Tracer
     tracer = Tracer() if a.trace else NULL_TRACER
+
+    if replica_batches:
+        from repro.api.serving import Request
+        from repro.serve.router import Router
+        rng = np.random.default_rng(1)
+
+        def deadline(i):
+            if a.route != "deadline":
+                return 0
+            return int(a.gen * (1 + (a.requests - i)))
+        if a.share_prefix:
+            pool = [rng.integers(0, cfg.vocab_size, a.prompt_len,
+                                 dtype=np.int32)
+                    for _ in range(max(1, a.requests // 4))]
+            prompt_of = lambda i: pool[i % len(pool)].copy()
+        else:
+            prompt_of = lambda i: rng.integers(0, cfg.vocab_size,
+                                               a.prompt_len, dtype=np.int32)
+        reqs = [Request(rid=i, prompt=prompt_of(i), deadline=deadline(i))
+                for i in range(a.requests)]
+        router = Router(plan, policy=a.route, tracer=tracer)
+        rep = router.run(reqs)
+        if a.trace:
+            print(f"trace: {tracer.export(a.trace)}")
+        occ = rep.occupancy()
+        print(f"arch={cfg.name} replicas={a.replicas} route={a.route} "
+              f"topology={a.topology or 'flat'} requests={a.requests} "
+              f"tokens={rep.tokens_out} "
+              f"throughput={rep.tokens_per_s():.1f} tok/s "
+              f"occupancy={'n/a' if occ is None else f'{occ:.2f}'}")
+        print(f"router: dispatches={rep.router['dispatches']} "
+              f"affinity_hits={rep.router['affinity_hits']} "
+              f"rebalances={rep.router['rebalances']} "
+              f"rounds={rep.router['rounds']} "
+              f"replica_downs={rep.router['replica_downs']} "
+              f"queue_peak={rep.router['queue_depth_peak']}")
+        if a.share_prefix:
+            print(f"memory: prefix_hit={rep.prefix_hit_tokens} tok "
+                  f"shared={rep.pages_shared} evictions={rep.evictions}")
+        lat = sorted(r.latency_s for r in rep.requests)
+        print(f"latency: p50={lat[len(lat) // 2] * 1e3:.1f}ms "
+              f"max={lat[-1] * 1e3:.1f}ms failed={rep.failed_requests}")
+        return
+
     eng = Engine(plan, tracer=tracer)
 
     if a.requests:

@@ -115,6 +115,17 @@ def summarize(doc: dict) -> list[str]:
                      f"evictions={counters.get('serve/evictions', 0):g} "
                      f"preemptions="
                      f"{counters.get('serve/preemptions', 0):g}")
+    disp = counters.get("serve/router_dispatches")
+    if disp:
+        lines.append(f"serve router: dispatches={disp:g} "
+                     f"affinity_hits="
+                     f"{counters.get('serve/router_affinity_hits', 0):g} "
+                     f"rebalances="
+                     f"{counters.get('serve/router_rebalances', 0):g} "
+                     f"queue_depth_peak="
+                     f"{gauges.get('serve/router_queue_depth', 0):g} "
+                     f"replica_downs="
+                     f"{counters.get('fault/replica_downs', 0):g}")
     wt = hists.get("train/wait_s")
     if wt:
         lines.append(f"gate waits: n={wt['count']} "

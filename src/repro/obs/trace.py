@@ -106,6 +106,17 @@ class Tracer:
         with self._lock:
             self._events.append(("C", track, name, t, 0.0, {name: value}))
 
+    # -- scoping -----------------------------------------------------------
+    def scoped(self, prefix: str) -> "Tracer":
+        """A view of this tracer that prepends `prefix` to every track name
+        — the Router gives each serve replica `scoped('r{i}/')` so one
+        exported trace reads like the fleet ('r0/sched', 'r1/sched', ...).
+        Events, the lock, the clock and the MetricsRegistry are shared with
+        the parent; disabled tracers return themselves (still free)."""
+        if not self.enabled:
+            return self
+        return _ScopedTracer(self, prefix)
+
     # -- reading -----------------------------------------------------------
     def events(self) -> list:
         with self._lock:
@@ -128,6 +139,52 @@ class Tracer:
         from repro.obs.export import write_chrome
         tel = telemetry if telemetry is not None else self.metrics.snapshot()
         return write_chrome(self.events(), path, telemetry=tel)
+
+
+class _ScopedTracer(Tracer):
+    """Track-prefixing view over a parent Tracer (see Tracer.scoped).
+
+    Shares the parent's event list, lock, clock and metrics — only track
+    names change, so the parent's export() sees every scoped event and
+    metrics stay fleet-global (counters from all replicas accumulate in
+    one registry)."""
+
+    def __init__(self, parent: Tracer, prefix: str):
+        # deliberately NOT calling super().__init__: this view delegates
+        # to the parent (whose _Span objects bind to the parent, so the
+        # prefix is applied exactly once), rather than owning fresh state
+        self._parent = parent
+        self._prefix = prefix
+        self.enabled = parent.enabled
+        self.metrics = parent.metrics
+
+    def now(self) -> float:
+        return self._parent.now()
+
+    def span(self, track: str, name: str, **args):
+        return self._parent.span(self._prefix + track, name, **args)
+
+    def add_span(self, track: str, name: str, t0: float, t1: float,
+                 **args) -> None:
+        self._parent.add_span(self._prefix + track, name, t0, t1, **args)
+
+    def instant(self, track: str, name: str, **args) -> None:
+        self._parent.instant(self._prefix + track, name, **args)
+
+    def counter(self, track: str, name: str, value: float) -> None:
+        self._parent.counter(self._prefix + track, name, value)
+
+    def events(self) -> list:
+        return self._parent.events()
+
+    def __len__(self) -> int:
+        return len(self._parent)
+
+    def export(self, path: str, *, telemetry: Optional[dict] = None) -> str:
+        return self._parent.export(path, telemetry=telemetry)
+
+    def scoped(self, prefix: str) -> "Tracer":
+        return _ScopedTracer(self._parent, self._prefix + prefix)
 
 
 NULL_TRACER = Tracer(enabled=False)

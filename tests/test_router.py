@@ -1,0 +1,298 @@
+"""Router invariants (repro.serve.router): plan validation for replica
+fleets, FIFO no-starvation, prefix affinity (one replica owns a shared
+prefix, zero cross-replica duplicate pages), bit-identical token streams
+vs the single-replica Scheduler oracle on all three serve families,
+replica-crash chaos re-dispatch, and ServeReport.merge() regression
+against the single-replica degenerate case."""
+import numpy as np
+import pytest
+
+from repro.api import (ClusterSpec, Engine, FaultPlan, PartitionSpec, Plan,
+                       ReplicaDown, ReplicaSpec, RunSpec, ServeSpec)
+from repro.api.report import ServeReport
+from repro.api.serving import Request, Scheduler
+from repro.configs import ARCHS, reduced
+from repro.obs import Tracer
+from repro.serve.router import ROUTER_POLICIES, Router
+
+SERVE_ARCHS = ("qwen3-0.6b", "h2o-danube-1.8b", "rwkv6-3b")
+
+
+def _cfg(name: str = "qwen3-0.6b", **over):
+    base = dict(num_layers=2, d_model=32, d_ff=64, vocab_size=256,
+                num_microbatches=2)
+    if ARCHS[name].attn_type == "swa":
+        base["window_size"] = 6
+    base.update(over)
+    return reduced(ARCHS[name], **base)
+
+
+def _sv(**over):
+    base = dict(prompt_len=8, gen=4, max_batch=4, page_size=4)
+    base.update(over)
+    return ServeSpec(**base)
+
+
+def _reqs(seed, n, *, vocab=256, pmax=8, gen=4, shared=0, deadline=False):
+    """n seeded requests; the first `shared` share one full-page prompt."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, vocab, pmax, dtype=np.int32)
+    out = []
+    for i in range(n):
+        if i < shared:
+            prompt = common.copy()
+        else:
+            prompt = rng.integers(0, vocab, int(rng.integers(2, pmax + 1)),
+                                  dtype=np.int32)
+        out.append(Request(rid=i, prompt=prompt,
+                           max_new_tokens=int(rng.integers(1, gen + 1)),
+                           deadline=int(rng.integers(gen, 6 * gen))
+                           if deadline else 0))
+    return out
+
+
+def _streams(report):
+    return {s.rid: list(s.tokens) for s in report.requests}
+
+
+# ---------------------------------------------------------------------------
+# Plan validation: the data-parallel serve lift
+# ---------------------------------------------------------------------------
+def test_cluster_plan_validation():
+    cfg = _cfg()
+    # replicas ride partition.data on the threads backend
+    plan = Plan(arch=cfg, serve=_sv(), partition=PartitionSpec(data=2))
+    assert "replicas=2" in plan.describe()
+    with pytest.raises(ValueError, match="data"):
+        Plan(arch=cfg, serve=_sv(), partition=PartitionSpec(data=0))
+    # spmd serve keeps one replica on the mesh
+    with pytest.raises(ValueError, match="data-parallel serve"):
+        Plan(arch=cfg, serve=_sv(),
+             run=RunSpec(backend="spmd"),
+             partition=PartitionSpec(stages=2, tp=1, data=2, devices=4))
+    with pytest.raises(ValueError, match="data-parallel serve"):
+        Plan(arch=cfg, serve=_sv(replicas=(ReplicaSpec(), ReplicaSpec())),
+             run=RunSpec(backend="spmd"),
+             partition=PartitionSpec(stages=2, tp=1, data=1, devices=2))
+    # per-replica specs must match the fleet size and fit the ceiling
+    with pytest.raises(ValueError, match="replicas"):
+        Plan(arch=cfg, serve=_sv(replicas=(ReplicaSpec(max_batch=2),)),
+             partition=PartitionSpec(data=2))
+    with pytest.raises(ValueError, match="max_batch"):
+        Plan(arch=cfg, serve=_sv(replicas=(ReplicaSpec(max_batch=8),
+                                           ReplicaSpec(max_batch=2))),
+             partition=PartitionSpec(data=2))
+    # a whimpy replica still has to hold one worst-case request
+    with pytest.raises(ValueError, match="worst-case"):
+        Plan(arch=cfg, serve=_sv(max_pages=24,
+                                 replicas=(ReplicaSpec(max_batch=4),
+                                           ReplicaSpec(max_batch=2,
+                                                       max_pages=1))),
+             partition=PartitionSpec(data=2))
+    # topology prices the Router; other cluster knobs stay train-side
+    Plan(arch=cfg, serve=_sv(), partition=PartitionSpec(data=2),
+         cluster=ClusterSpec(topology="hetero"))
+    with pytest.raises(ValueError, match="batches requests"):
+        Plan(arch=cfg, serve=_sv(), partition=PartitionSpec(data=2),
+             cluster=ClusterSpec(num_vw=2, topology="hetero"))
+
+
+def test_replica_down_validation():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="non-negative"):
+        FaultPlan(seed=0, events=(ReplicaDown(replica=-1, step=0),))
+    # a single-replica plan has no survivor to re-dispatch onto
+    with pytest.raises(ValueError, match="survivor"):
+        Plan(arch=cfg, serve=_sv(),
+             faults=FaultPlan(seed=0, events=(ReplicaDown(0, 1),)))
+    with pytest.raises(ValueError, match="replica"):
+        Plan(arch=cfg, serve=_sv(), partition=PartitionSpec(data=2),
+             faults=FaultPlan(seed=0, events=(ReplicaDown(5, 1),)))
+    # ReplicaDown is a serving fault
+    with pytest.raises(ValueError, match="serving fault"):
+        Plan(arch=cfg, run=RunSpec(max_waves=1, batch=4, seq=16),
+             faults=FaultPlan(seed=0, events=(ReplicaDown(0, 1),)))
+    # sample_cluster stays inside the fleet
+    fp = FaultPlan.sample_cluster(3, replicas=3)
+    (ev,) = fp.of_type(ReplicaDown)
+    assert 0 <= ev.replica < 3 and ev.step >= 1
+
+
+def test_router_rejects_bad_plans():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="ServeSpec"):
+        Router(Plan(arch=cfg, run=RunSpec(max_waves=1, batch=4, seq=16)))
+    with pytest.raises(ValueError, match="policy"):
+        Router(Plan(arch=cfg, serve=_sv()), policy="round_robin")
+    assert set(ROUTER_POLICIES) == {"least_loaded", "deadline"}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch invariants
+# ---------------------------------------------------------------------------
+def test_fifo_no_starvation_under_pressure():
+    """More requests than the whole fleet has slots: every request
+    retires, none fails, and the merged report covers all rids."""
+    plan = Plan(arch=_cfg(), partition=PartitionSpec(data=2),
+                serve=_sv(max_batch=2,
+                          replicas=(ReplicaSpec(max_batch=2),
+                                    ReplicaSpec(max_batch=1))))
+    reqs = _reqs(5, 9)
+    rep = Router(plan).run(reqs)
+    assert rep.failed_requests == 0
+    assert sorted(s.rid for s in rep.requests) == list(range(9))
+    assert rep.tokens_out == sum(r.max_new_tokens for r in reqs)
+    assert rep.router["dispatches"] == 9
+    assert rep.router["queue_depth_peak"] == 9
+
+
+def test_affinity_pins_shared_prefix_to_one_replica():
+    """Identical page-aligned prefixes land on one replica: its prefix
+    index holds the shared pages, every other replica's pool stays
+    untouched — zero cross-replica duplicate pages."""
+    plan = Plan(arch=_cfg(), partition=PartitionSpec(data=3),
+                serve=_sv(share_prefix=True))
+    router = Router(plan)
+    reqs = _reqs(7, 6, shared=6)
+    rep = router.run(reqs)
+    assert rep.failed_requests == 0
+    assert rep.router["affinity_hits"] >= 5      # all but the first
+    assert rep.prefix_hit_tokens > 0
+    touched = [r.idx for r in router.replicas
+               if r.store.peak_pages > 0 or len(r.mm.index.by_page)]
+    assert len(touched) == 1, f"shared prefix spread to {touched}"
+    # the shared pages exist once, on that replica
+    owner = router.replicas[touched[0]]
+    assert len(owner.mm.index.by_page) > 0
+
+
+def test_topology_prices_dispatch():
+    """A fast-but-far replica loses to a near whimpy one: with the client
+    at the ps host (vw0's node) and replica 1 behind the inter-node link,
+    ties break toward vw0 and only load pressure pushes traffic across."""
+    from repro.dist.topology import ClusterTopology, LinkSpec, Pod
+    slow = LinkSpec("far", gbps=0.1, latency_s=5.0)   # absurdly far
+    topo = ClusterTopology([Pod("n0", ("vw0",)), Pod("n1", ("vw1",))],
+                           inter=slow)
+    plan = Plan(arch=_cfg(), partition=PartitionSpec(data=2),
+                serve=_sv(max_batch=2,
+                          replicas=(ReplicaSpec(max_batch=1),
+                                    ReplicaSpec(max_batch=2))))
+    router = Router(plan.replace(cluster__topology=topo))
+    assign = router._dispatch(_reqs(9, 3))
+    # replica 0 is whimpy (1 slot) but near: it still wins every request
+    # because 5 s of link latency dwarfs any queueing advantage
+    assert len(assign[0]) == 3 and len(assign[1]) == 0
+    # without the topology the same fleet spreads by load
+    flat = Router(plan)
+    spread = flat._dispatch(_reqs(9, 3))
+    assert len(spread[1]) > 0
+
+
+def test_deadline_policy_dispatches_by_slack():
+    plan = Plan(arch=_cfg(), partition=PartitionSpec(data=2),
+                serve=_sv(max_batch=2, replicas=(ReplicaSpec(max_batch=2),
+                                                 ReplicaSpec(max_batch=2))))
+    router = Router(plan, policy="deadline")
+    reqs = [Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2, deadline=100),
+            Request(rid=1, prompt=np.arange(4, dtype=np.int32) + 1,
+                    max_new_tokens=2, deadline=3)]
+    assign = router._dispatch(reqs)
+    # the tight-deadline request dispatched first -> emptiest replica (0)
+    assert assign[0][0].rid == 1
+    for r in router.replicas:
+        assert r.scheduler.policy == "deadline"
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: routing never changes a token stream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", SERVE_ARCHS)
+def test_router_streams_match_single_replica_oracle(arch):
+    cfg = _cfg(arch)
+    paged = dict(page_size=4) if arch != "rwkv6-3b" else dict(page_size=0)
+    sv = _sv(temperature=0.7, share_prefix=arch == "qwen3-0.6b", **paged)
+    reqs = _reqs(11, 6, shared=2)
+    import dataclasses
+    plan = Plan(arch=cfg, partition=PartitionSpec(data=2),
+                cluster=ClusterSpec(topology="2node"),
+                serve=dataclasses.replace(
+                    sv, replicas=(ReplicaSpec(max_batch=4),
+                                  ReplicaSpec(max_batch=2))))
+    got = Router(plan).run([Request(rid=r.rid, prompt=np.asarray(r.prompt),
+                                    max_new_tokens=r.max_new_tokens)
+                            for r in reqs])
+    oracle = Scheduler(Engine(Plan(arch=cfg, serve=sv))).run(
+        [Request(rid=r.rid, prompt=np.asarray(r.prompt),
+                 max_new_tokens=r.max_new_tokens) for r in reqs])
+    assert _streams(got) == _streams(oracle)
+
+
+def test_chaos_replica_down_redispatch_no_divergence():
+    """Kill one replica mid-decode: unfinished requests re-dispatch to the
+    survivor and every stream still matches the single-replica oracle."""
+    cfg = _cfg()
+    sv = _sv(max_batch=2)
+    reqs = _reqs(13, 6)
+    plan = Plan(arch=cfg, partition=PartitionSpec(data=2),
+                faults=FaultPlan(seed=0, events=(ReplicaDown(1, 1),)),
+                serve=sv)
+    tr = Tracer()
+    rep = Router(plan, tracer=tr).run(
+        [Request(rid=r.rid, prompt=np.asarray(r.prompt),
+                 max_new_tokens=r.max_new_tokens) for r in reqs])
+    assert rep.router["replica_downs"] == 1
+    assert rep.router["rounds"] >= 2           # survivors re-dispatched
+    assert rep.router["rebalances"] > 0
+    assert rep.failed_requests == 0
+    assert sorted(s.rid for s in rep.requests) == list(range(6))
+    oracle = Scheduler(Engine(Plan(arch=cfg, serve=sv))).run(
+        [Request(rid=r.rid, prompt=np.asarray(r.prompt),
+                 max_new_tokens=r.max_new_tokens) for r in reqs])
+    assert _streams(rep) == _streams(oracle)
+    snap = tr.metrics.snapshot()
+    assert snap["counters"]["fault/replica_downs"] == 1
+
+
+def test_all_replicas_down_raises():
+    plan = Plan(arch=_cfg(), partition=PartitionSpec(data=2),
+                faults=FaultPlan(seed=0, events=(ReplicaDown(0, 0),
+                                                 ReplicaDown(1, 0))),
+                serve=_sv(max_batch=2))
+    with pytest.raises(RuntimeError, match="down|no requests|spin"):
+        Router(plan).run(_reqs(17, 4))
+
+
+# ---------------------------------------------------------------------------
+# ServeReport.merge
+# ---------------------------------------------------------------------------
+def test_merge_degenerate_single_replica():
+    """merge([r]) reproduces the single report's derived metrics."""
+    plan = Plan(arch=_cfg(), serve=_sv())
+    single = Scheduler(Engine(plan)).run(_reqs(19, 5))
+    merged = ServeReport.merge([single], wall_s=single.wall_s)
+    assert merged.occupancy() == pytest.approx(single.occupancy())
+    assert merged.page_utilization() == pytest.approx(
+        single.page_utilization())
+    assert merged.tokens_out == single.tokens_out
+    assert merged.tokens_per_s() == pytest.approx(single.tokens_per_s())
+    assert _streams(merged) == _streams(single)
+
+
+def test_merge_weights_capacity_by_decode_steps():
+    a = ServeReport(arch="x", backend="threads", max_batch=4,
+                    decode_steps=10, slot_steps=20, pages_total=10,
+                    peak_pages=5, wall_s=1.0)
+    b = ServeReport(arch="x", backend="threads", max_batch=2,
+                    decode_steps=5, slot_steps=10, pages_total=4,
+                    peak_pages=4, wall_s=2.0)
+    m = ServeReport.merge([a, b], router={"policy": "least_loaded"})
+    # occupancy = (20+10) / (10*4 + 5*2) = 30/50
+    assert m.occupancy() == pytest.approx(30 / 50)
+    # page utilization = (5+4) / (10+4)
+    assert m.page_utilization() == pytest.approx(9 / 14)
+    assert m.wall_s == 2.0                      # replicas ran concurrently
+    assert m.router["policy"] == "least_loaded"
+    with pytest.raises(ValueError, match="at least one"):
+        ServeReport.merge([])

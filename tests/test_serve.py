@@ -71,8 +71,11 @@ def test_serve_plan_validation():
         Plan(arch=cfg, serve=sv, run=RunSpec(codec="topk:0.25"))
     with pytest.raises(ValueError, match="batches requests"):
         Plan(arch=cfg, serve=sv, cluster=ClusterSpec(num_vw=2))
-    with pytest.raises(ValueError, match="batches requests"):
-        Plan(arch=cfg, serve=sv, cluster=ClusterSpec(topology="2node"))
+    # cluster.topology alone is legal on serve Plans now: it prices the
+    # Router's dispatch (see repro.serve.router)
+    Plan(arch=cfg, serve=sv, cluster=ClusterSpec(topology="2node"))
+    with pytest.raises(ValueError, match="unknown topology"):
+        Plan(arch=cfg, serve=sv, cluster=ClusterSpec(topology="bogus"))
     # spmd serve keeps the whole batch on the model mesh
     with pytest.raises(ValueError, match="data-parallel serve"):
         Plan(arch=cfg, serve=sv, run=RunSpec(backend="spmd"),
